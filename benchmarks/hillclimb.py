@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse.
+
+Three mandated cells (worst roofline / most collective-bound / most
+representative); each variant is one knob change against the paper-faithful
+baseline. Results: benchmarks/results/perf/<cell>__<tag>.json and a summary
+table printed at the end. EXPERIMENTS.md §Perf narrates the iterations.
+"""
+import argparse
+import sys
+
+from repro.launch.dryrun import run_cell
+from repro.utils import dump_json, logger
+
+# (arch, shape) -> [(tag, rt_overrides, kwargs)]
+PLANS = {
+    ("llama3-405b", "train_4k"): [
+        ("baseline", {}, {}),
+        ("p_bf16", {"attn_p_dtype": "bfloat16"}, {}),
+        ("p_bf16_mb4", {"attn_p_dtype": "bfloat16"}, {"microbatch": 4}),
+        ("p_bf16_blk2k", {"attn_p_dtype": "bfloat16", "block_k": 2048}, {}),
+        ("p_bf16_xent1k", {"attn_p_dtype": "bfloat16", "xent_chunk": 1024}, {}),
+        ("zero3_gather", {"fsdp_gather_weights": True}, {}),
+        ("zero3_blk2k", {"fsdp_gather_weights": True, "block_k": 2048}, {}),
+        ("zero3_blk4k", {"fsdp_gather_weights": True, "block_k": 4096}, {}),
+    ],
+    ("llama4-maverick-400b-a17b", "train_4k"): [
+        ("baseline", {}, {}),
+        ("combine_reshard", {"moe_combine_reshard": True}, {}),
+        ("combine_reshard_pbf16", {"moe_combine_reshard": True,
+                                   "attn_p_dtype": "bfloat16"}, {}),
+        ("cr_pbf16_mb2", {"moe_combine_reshard": True,
+                          "attn_p_dtype": "bfloat16"}, {"microbatch": 2}),
+        ("cr_zero3", {"moe_combine_reshard": True,
+                      "fsdp_gather_weights": True}, {}),
+        ("cr_zero3_blk2k", {"moe_combine_reshard": True,
+                            "fsdp_gather_weights": True, "block_k": 2048}, {}),
+    ],
+    ("jamba-v0.1-52b", "long_500k"): [
+        ("baseline", {}, {}),
+        ("cache_headdim", {"cache_shard": "head_dim"}, {}),
+        ("cache_headdim_cr", {"cache_shard": "head_dim",
+                              "moe_combine_reshard": True}, {}),
+        ("infer_sharding", {"infer_sharding": True}, {}),
+        ("infer_moe_gather", {"infer_sharding": True,
+                              "moe_gather_decode": True}, {}),
+        ("infer_moe_gather_hd", {"infer_sharding": True,
+                                 "moe_gather_decode": True,
+                                 "cache_shard": "head_dim"}, {}),
+        ("kvseq_consistent", {}, {}),
+        ("cache_hd_fixed", {"cache_shard": "head_dim"}, {}),
+        ("cache_hd_infer", {"cache_shard": "head_dim",
+                            "infer_sharding": True}, {}),
+    ],
+}
+
+OUT = "benchmarks/results/perf"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, help="arch/shape")
+    ap.add_argument("--only", default=None, help="comma-separated tags")
+    args = ap.parse_args()
+
+    rows = []
+    for (arch, shape), plan in PLANS.items():
+        if args.cell and args.cell != f"{arch}/{shape}":
+            continue
+        for tag, overrides, kw in plan:
+            if args.only and tag not in args.only.split(","):
+                continue
+            path = f"{OUT}/{arch}__{shape}__{tag}.json"
+            if os.path.exists(path):
+                logger.info("cached %s", path)
+                continue
+            logger.info("=== %s/%s [%s] %s", arch, shape, tag, overrides)
+            try:
+                rec = run_cell(arch, shape, multi_pod=False, save=False,
+                               rt_overrides=overrides or None,
+                               want_breakdown=True, **kw)
+            except Exception as e:  # noqa: BLE001
+                logger.exception("variant failed")
+                rec = {"status": "fail", "error": str(e)[:2000]}
+            rec["tag"] = tag
+            rec["overrides"] = overrides
+            dump_json(rec, path)
+            if rec.get("status") == "ok":
+                r = rec["roofline"]
+                rows.append((f"{arch}/{shape}", tag, r["t_compute"],
+                             r["t_memory"], r["t_collective"], r["dominant"],
+                             r["roofline_fraction"]))
+    for row in rows:
+        print(f"{row[0]:45s} {row[1]:22s} comp={row[2]*1e3:9.2f}ms "
+              f"mem={row[3]*1e3:9.2f}ms coll={row[4]*1e3:9.2f}ms "
+              f"{row[5]:10s} roofline={row[6]:.2%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""The paper's tool, end to end: characterize this machine's op latencies and
+memory hierarchy, persist the LatencyDB, and price a model's HLO with it
+(the PPT-GPU-style consumption the paper targets).
+
+  PYTHONPATH=src python examples/characterize.py [--full]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chains, measure, membench, perfmodel
+from repro.core.latency_db import LatencyDB
+from repro.core.timing import Timer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="full registry sweep")
+    ap.add_argument("--db", default="/tmp/latency_db.json")
+    args = ap.parse_args()
+    timer = Timer(warmup=2, reps=20)
+
+    # 1. clock overhead (paper Fig. 5)
+    ov = measure.clock_overhead(timer)
+    print("clock overhead (ns):", {k: round(v, 1) for k, v in ov.items()})
+
+    # 2. instruction table (paper Table II)
+    reg = chains.default_registry()
+    if not args.full:
+        keep = {"add", "mul", "mad", "div.s.regular", "div.s.irregular",
+                "div.s.runtime", "fma.float32", "div.runtime.float32",
+                "sqrt", "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16"}
+        reg = tuple(o for o in reg if o.name in keep)
+    db = LatencyDB(args.db)
+    measure.run_suite(reg, opt_levels=("O0", "O3"), db=db, timer=timer)
+    db.save()
+    print("\n== Table II analog ==")
+    print(db.table_markdown())
+
+    # 3. memory hierarchy (paper Fig. 6)
+    pts = membench.sweep([1 << k for k in range(13, 24, 2)], timer=timer)
+    print("\n== Fig. 6 analog: hierarchy levels ==")
+    for lv in membench.detect_levels(pts):
+        print(f"  level {lv['level']}: hit {lv['hit_latency_ns']:.2f} ns, "
+              f"capacity >= {lv['capacity_bytes_lower_bound']} B")
+
+    # 4. feed a performance model (the paper's use case)
+    def mlp(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32)
+              for s in ((64, 256), (256, 1024), (1024, 256))]
+    hlo = jax.jit(mlp).lower(*shapes).compile().as_text()
+    est = perfmodel.HloLatencyEstimator(db)
+    print(f"\nHLO-priced mlp latency estimate: {est.estimate_ns(hlo):.0f} ns "
+          f"(from {len(db)} measured records)")
+
+
+if __name__ == "__main__":
+    main()

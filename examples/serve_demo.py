@@ -1,0 +1,41 @@
+"""Serve a small model with batched requests: prefill + decode engine, ragged
+prompts, greedy and sampled decoding.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig, Runtime
+from repro.serving import Engine
+
+
+def main() -> None:
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=4,
+                      d_model=128, n_heads=8, n_kv_heads=2, d_ff=512,
+                      vocab_size=1024, param_dtype="float32",
+                      compute_dtype="float32")
+    rt = Runtime(remat=False, moe_groups=1)
+    params = transformer.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, rt)
+
+    rng = np.random.RandomState(0)
+    batch = [rng.randint(1, 1024, size=rng.randint(4, 12)).tolist()
+             for _ in range(8)]
+    t0 = time.perf_counter()
+    out = eng.generate(batch, max_new=24)
+    dt = time.perf_counter() - t0
+    toks = out.tokens.size
+    print(f"batched 8 ragged requests, {toks} new tokens in {dt*1e3:.0f} ms "
+          f"({toks/dt:.0f} tok/s on host CPU)")
+    for i, row in enumerate(out.tokens[:4]):
+        print(f"  req{i} (prompt {out.prompt_lens[i]} toks):", row.tolist())
+    sampled = eng.generate(batch[:2], max_new=8, temperature=0.8, seed=1)
+    print("sampled:", sampled.tokens.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: TPU-native instruction/memory latency characterization (the paper's
+technique) integrated as a first-class subsystem of a multi-pod JAX
+training/serving framework. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""The paper's contribution: low-overhead, portable latency characterization.
+
+Public surface:
+  - chains.default_registry(): the instruction table (8 categories)
+  - measure.run_suite(): sweep registry x opt levels -> LatencyDB
+  - measure.clock_overhead(): Fig. 5 analog
+  - membench.sweep(): memory-hierarchy latency probe (Fig. 6 analog)
+  - optlevels: the -O0/-O1/-O3 compiler axis
+  - latency_db.LatencyDB: persistent result tables (Table II/III analogs)
+  - perfmodel.Roofline / HloLatencyEstimator: the model-feeding use case
+  - hlo_analysis: collective traffic + op histograms from HLO text
+"""
+from repro.core import chains, hlo_analysis, latency_db, measure, membench, optlevels, perfmodel
+from repro.core.chains import OpSpec, default_registry
+from repro.core.latency_db import LatencyDB, LatencyRecord
+from repro.core.perfmodel import CPU_HOST, TPU_V5E, HardwareSpec, HloLatencyEstimator, Roofline
+from repro.core.timing import Measurement, Timer
+
+__all__ = [
+    "chains", "hlo_analysis", "latency_db", "measure", "membench", "optlevels",
+    "perfmodel", "OpSpec", "default_registry", "LatencyDB", "LatencyRecord",
+    "Measurement", "Timer", "Roofline", "HloLatencyEstimator", "HardwareSpec",
+    "TPU_V5E", "CPU_HOST",
+]

@@ -1,0 +1,262 @@
+"""Dependent-op chains: the paper's instruction table, at the JAX/StableHLO layer.
+
+The paper (Table II) sweeps every PTX instruction in 8 categories, timing each
+one inside a ``%clock`` sandwich with a *dependent dummy operation* so `-O3`
+cannot optimize it away. Here each table entry is an :class:`OpSpec` whose
+``step(x, ops)`` function maps the chain carry ``x`` to the next carry through
+the measured primitive. Latency is extracted with :meth:`Timer.slope` between
+two chain lengths, which cancels dispatch overhead exactly (the clock-overhead
+subtraction of the paper, Fig. 5).
+
+Anti-optimization discipline (mirrors Section IV-A of the paper):
+
+* every operand is a **runtime argument**, so XLA's algebraic simplifier cannot
+  constant-fold, strength-reduce, or identity-eliminate (``x*1.0``) the chain —
+  except for the ``div``/``rem`` *regular/irregular* variants, where a constant
+  power-of-two / non-power-of-two divisor is **deliberately** baked in to expose
+  the compiler's strength reduction, exactly like the paper's divisor split;
+* idempotent or involutive primitives (``abs``, ``not``, ``min``…) are guarded
+  with one extra trivial op so consecutive applications cannot be collapsed;
+  the guard count is recorded in ``OpSpec.guard`` and reporting subtracts
+  ``guard × latency(add)``;
+* fixed points of every step are numerically stable so 256-long chains neither
+  overflow nor produce NaNs (validated by tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = Any
+
+CATEGORIES = (
+    "int_arith",        # (1) Integer Arithmetic Instructions
+    "logic_shift",      # (2) Logic and Shift Instructions
+    "fp32",             # (3) Single Precision Instructions
+    "fp64",             # (4) Double Precision Instructions
+    "fp16",             # (5) Half Precision Instructions (f16 + bf16 on TPU)
+    "multi_precision",  # (6) Multi/extended Precision (carry-chain analog: i64, widening mul)
+    "special_math",     # (7) Special Mathematical Instructions (SFU -> TPU transcendental)
+    "int_intrinsic",    # (8) Integer Intrinsic Instructions
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpSpec:
+    """One row of the latency table."""
+
+    name: str
+    category: str
+    dtype: str                     # dtype of the chain carry
+    step: Callable[..., Array]     # (x, *operands) -> next x (dependent!)
+    init: float | int              # initial carry value
+    operands: tuple[float | int, ...] = ()   # runtime operand values
+    guard: int = 0                 # number of extra trivial ALU ops inside step
+    notes: str = ""
+    requires_x64: bool = False     # step uses 64-bit intermediates
+    max_chain: int | None = None   # cap chain length (XLA compile-time pathologies)
+
+    def carry(self) -> Array:
+        return jnp.asarray(self.init, dtype=self.dtype)
+
+    def operand_arrays(self) -> tuple[Array, ...]:
+        return tuple(jnp.asarray(v, dtype=self.dtype) for v in self.operands)
+
+
+def chain_fn(spec: OpSpec, n: int) -> Callable[..., Array]:
+    """Straight-line (loop-free, like the paper's PTX bodies) chain of length n."""
+    step = spec.step
+
+    def chain(x: Array, *ops: Array) -> Array:
+        for _ in range(n):
+            x = step(x, *ops)
+        return x
+
+    return chain
+
+
+# --------------------------------------------------------------------------
+# Registry builders. Fixed-point stability of each step is covered by tests.
+# --------------------------------------------------------------------------
+def _f(name: str, cat: str, dt: str, step: Callable[..., Array], init: float,
+       operands: tuple[float, ...] = (), guard: int = 0, notes: str = "",
+       requires_x64: bool = False, max_chain: int | None = None) -> OpSpec:
+    return OpSpec(name, cat, dt, step, init, operands, guard, notes, requires_x64, max_chain)
+
+
+def _int_ops(dt: str = "int32", cat: str = "int_arith") -> list[OpSpec]:
+    i = functools.partial(_f, cat=cat, dt=dt)
+    sfx = "" if dt == "int32" else f".{dt}"
+    # Integer +,-,* are reassociable: LLVM collapses a pure chain (x+a+a+...
+    # -> x + n*a), which would report 0 ns — the exact failure mode the
+    # paper's "dependent dummy operation" guards against. Each step therefore
+    # pairs the measured op with a xor/add guard that blocks reassociation;
+    # reporting subtracts guard x baseline (see measure.run_suite).
+    ops = [
+        i(f"add{sfx}", step=lambda x, a, b: (x + a) ^ b, init=1, operands=(3, 0x55),
+          guard=1, notes="xor-guarded: int add chains reassociate"),
+        i(f"sub{sfx}", step=lambda x, a, b: (x - a) ^ b, init=1, operands=(3, 0x55),
+          guard=1, notes="xor-guarded"),
+        i(f"mul{sfx}", step=lambda x, a, b: (x * a) ^ b, init=3, operands=(5, 0x55),
+          guard=1, notes="xor-guarded"),
+        i(f"mad{sfx}", step=lambda x, a, b: (x * a + b) ^ a, init=3, operands=(5, 1),
+          guard=1, notes="xor-guarded"),
+        i(f"min{sfx}", step=lambda x, a, b: jnp.minimum(x, a) + b, init=1,
+          operands=(7, 1), guard=1, notes="guarded: min is idempotent"),
+        i(f"max{sfx}", step=lambda x, a, b: jnp.maximum(x, a) - b, init=1,
+          operands=(7, 1), guard=1, notes="guarded: max is idempotent"),
+        i(f"abs{sfx}", step=lambda x, a: jnp.abs(x - a), init=0, operands=(1,),
+          guard=1, notes="guarded: abs is idempotent"),
+        # Divisor split, exactly the paper's regular/irregular/runtime taxonomy.
+        # PTX div.s truncates like C, so lax.div (truncating) is the faithful
+        # primitive; jnp's floor-div would add sign-correction ops.
+        i(f"div.s.regular{sfx}", step=lambda x, a: lax.div(x, jnp.asarray(4, x.dtype)) + a,
+          init=9, operands=(7,), guard=1,
+          notes="const pow-2 divisor -> strength-reduced to shift"),
+        i(f"div.s.irregular{sfx}", step=lambda x, a: lax.div(x, jnp.asarray(5, x.dtype)) + a,
+          init=9, operands=(7,), guard=1, notes="const non-pow-2 divisor -> magic-number mul"),
+        i(f"div.s.runtime{sfx}", step=lambda x, a, b: lax.div(x, a) + b, init=9,
+          operands=(5, 7), guard=1, notes="runtime divisor -> true divide"),
+        i(f"rem.s{sfx}", step=lambda x, a, b: lax.rem(x, a) + b, init=9, operands=(5, 7),
+          guard=1),
+    ]
+    if dt == "int32":
+        u = functools.partial(_f, cat=cat, dt="uint32")
+        ops += [
+            u("div.u.regular", step=lambda x, a: lax.div(x, jnp.asarray(8, x.dtype)) + a,
+              init=9, operands=(7,), guard=1),
+            u("div.u.irregular", step=lambda x, a: lax.div(x, jnp.asarray(6, x.dtype)) + a,
+              init=9, operands=(7,), guard=1),
+            u("div.u.runtime", step=lambda x, a, b: lax.div(x, a) + b, init=9,
+              operands=(5, 7), guard=1),
+            u("rem.u", step=lambda x, a, b: lax.rem(x, a) + b, init=9, operands=(5, 7),
+              guard=1),
+        ]
+    return ops
+
+
+def _logic_ops() -> list[OpSpec]:
+    l = functools.partial(_f, cat="logic_shift", dt="int32")
+    return [
+        l("and", step=lambda x, a, b: (x & a) + b, init=0x55AA, operands=(0x0F0F, 3),
+          guard=1, notes="add-guarded: and is idempotent/absorbing"),
+        l("or", step=lambda x, a, b: (x | a) + b, init=0x55AA, operands=(0x0F0F, 3),
+          guard=1, notes="add-guarded: or is idempotent/absorbing"),
+        l("xor", step=lambda x, a, b: (x ^ a) + b, init=0x55AA, operands=(0x0F0F, 3),
+          guard=1, notes="add-guarded: xor chains cancel pairwise"),
+        l("not", step=lambda x, a: ~x + a, init=0x55AA, operands=(3,),
+          guard=1, notes="add-guarded: not is involutive"),
+        l("cnot", step=lambda x, a: (x == 0).astype(jnp.int32) + a, init=0, operands=(0,),
+          guard=1, notes="PTX cnot: x==0 ? 1 : 0"),
+        l("shl", step=lambda x, a, b: (x << a) | b, init=1, operands=(1, 1),
+          guard=1, notes="or-guarded: shift-by-const chains merge"),
+        l("shr", step=lambda x, a: (x >> a) | a, init=1 << 30, operands=(1,), guard=1),
+    ]
+
+
+def _float_ops(dt: str, cat: str) -> list[OpSpec]:
+    f = functools.partial(_f, cat=cat, dt=dt)
+    ops = [
+        f(f"add.{dt}", step=lambda x, a: x + a, init=1.0, operands=(1e-3,)),
+        f(f"sub.{dt}", step=lambda x, a: x - a, init=1.0, operands=(1e-3,)),
+        f(f"mul.{dt}", step=lambda x, a: x * a, init=1.0, operands=(0.999,)),
+        f(f"fma.{dt}", step=lambda x, a, b: x * a + b, init=1.0, operands=(0.5, 0.5)),
+        f(f"min.{dt}", step=lambda x, a, b: jnp.minimum(x, a) + b, init=0.0,
+          operands=(2.0, 0.125), guard=1),
+        f(f"max.{dt}", step=lambda x, a, b: jnp.maximum(x, a) - b, init=4.0,
+          operands=(2.0, 0.125), guard=1),
+    ]
+    if cat in ("fp32", "fp64"):
+        ops += [
+            f(f"div.regular.{dt}", step=lambda x, a: x / 4.0 + a, init=1.0, operands=(0.75,),
+              guard=1, notes="const pow-2 divisor -> reciprocal multiply"),
+            f(f"div.irregular.{dt}", step=lambda x, a: x / 3.0 + a, init=1.0, operands=(0.75,),
+              guard=1, notes="const non-pow-2 divisor"),
+            f(f"div.runtime.{dt}", step=lambda x, a, b: x / a + b, init=1.0, operands=(3.0, 0.75),
+              guard=1, notes="runtime divisor -> true fdiv"),
+        ]
+    return ops
+
+
+def _multi_precision_ops() -> list[OpSpec]:
+    m = functools.partial(_f, cat="multi_precision", dt="int64")
+    u = functools.partial(_f, cat="multi_precision", dt="uint32")
+
+    def mul64hi(x, a):
+        wide = x.astype(jnp.uint64) * a.astype(jnp.uint64)
+        return (wide >> jnp.uint64(32)).astype(jnp.uint32) | jnp.uint32(1)
+
+    return [
+        m("add.cc", step=lambda x, a, b: (x + a) ^ b, init=1, operands=(3, 0x55), guard=1,
+          notes="64-bit add == add-with-carry chain on 32-bit lanes; xor-guarded"),
+        m("sub.cc", step=lambda x, a, b: (x - a) ^ b, init=1, operands=(3, 0x55), guard=1),
+        m("mad.cc", step=lambda x, a, b: (x * a + b) ^ a, init=3, operands=(5, 1), guard=1),
+        m("mul.wide", step=lambda x, a, b: (x * a) ^ b, init=3, operands=(5, 0x55), guard=1),
+        u("mul64hi", step=mul64hi, init=0xDEADBEEF, operands=(0x9E3779B9,), guard=2,
+          notes="widening u32*u32->u64 high half; convert+shift guards", requires_x64=True),
+    ]
+
+
+def _special_math_ops() -> list[OpSpec]:
+    s = functools.partial(_f, cat="special_math", dt="float32")
+    return [
+        s("rcp", step=lambda x, a: 1.0 / x + a, init=2.0, operands=(0.5,), guard=1,
+          notes="guarded: rcp is involutive"),
+        s("sqrt", step=lambda x, a: jnp.sqrt(x) + a, init=1.0, operands=(0.25,), guard=1),
+        s("rsqrt", step=lambda x, a: lax.rsqrt(x) + a, init=1.0, operands=(0.25,), guard=1),
+        s("sin", step=lambda x, a: jnp.sin(x) + a, init=0.5, operands=(0.125,), guard=1),
+        s("cos", step=lambda x: jnp.cos(x), init=0.5, notes="cos has a stable fixed point"),
+        s("lg2", step=lambda x, a: jnp.log2(x + a), init=1.0, operands=(2.0,), guard=1),
+        s("ex2", step=lambda x, a: jnp.exp2(x) - a, init=0.0, operands=(1.0,), guard=1,
+          notes="fixed point 0; |f'(0)| = ln2 < 1"),
+        s("tanh", step=lambda x, a: jnp.tanh(x) + a, init=0.0, operands=(0.125,), guard=1),
+        s("copysign", step=lambda x, a, b: jnp.copysign(x, a) + b, init=1.0,
+          operands=(1.0, 1e-3), guard=1, notes="guarded: copysign is idempotent"),
+    ]
+
+
+def _int_intrinsic_ops() -> list[OpSpec]:
+    t = functools.partial(_f, cat="int_intrinsic", dt="int32")
+    tu = functools.partial(_f, cat="int_intrinsic", dt="uint32")
+    return [
+        t("sad", step=lambda x, a, b: jnp.abs(x - a) + b, init=0, operands=(3, 1), guard=1,
+          notes="PTX sad: |x-a|+b"),
+        tu("popc", step=lambda x, a: lax.population_count(x) ^ a, init=0xF0F0F0F0,
+           operands=(0xA5A5A5A5,), guard=1),
+        tu("clz", step=lambda x, a: lax.clz(x) + a, init=1, operands=(3,), guard=1),
+        t("bfe", step=lambda x, a, b: ((x >> a) & 0xFFFF) + b, init=0x7FFF00, operands=(3, 9),
+          guard=2, notes="bitfield extract: shift+mask"),
+        t("bfi", step=lambda x, a, b: (x & ~0xFF) | (a & 0xFF) | b, init=0x55AA55,
+          operands=(0xC3, 0), guard=3, notes="bitfield insert emulation"),
+        t("mul24", step=lambda x, a: ((x & 0xFFFFFF) * (a & 0xFFFFFF)) & 0x7FFFFFFF,
+          init=3, operands=(5,), guard=3, notes="24-bit multiply emulation"),
+    ]
+
+
+@functools.cache
+def default_registry(include_fp64: bool = True) -> tuple[OpSpec, ...]:
+    """All table rows: the JAX analog of sweeping PTX ISA 6.4."""
+    ops: list[OpSpec] = []
+    ops += _int_ops("int32")
+    ops += _logic_ops()
+    ops += _float_ops("float32", "fp32")
+    if include_fp64:
+        ops += _float_ops("float64", "fp64")
+    ops += _float_ops("bfloat16", "fp16")
+    ops += _float_ops("float16", "fp16")
+    ops += _multi_precision_ops()
+    ops += _special_math_ops()
+    ops += _int_intrinsic_ops()
+    names = [o.name for o in ops]
+    assert len(names) == len(set(names)), "duplicate op names in registry"
+    return tuple(ops)
+
+
+def by_category(cat: str, registry: Sequence[OpSpec] | None = None) -> list[OpSpec]:
+    registry = registry or default_registry()
+    return [o for o in registry if o.category == cat]

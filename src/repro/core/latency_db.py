@@ -1,0 +1,131 @@
+"""Persistent database of measured latencies (the paper's published tables).
+
+Records are keyed by (device_kind, backend, jax_version, opt_level, op, dtype)
+so the same suite run on different hardware / jax versions accumulates into one
+DB — that is how the paper's Table III (CUDA 9.0 vs 10.0) diff is produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Iterable
+
+import jax
+
+from repro.utils import dump_json, load_json, markdown_table, timestamp
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyRecord:
+    op: str
+    category: str
+    dtype: str
+    opt_level: str
+    latency_ns: float
+    mad_ns: float
+    cycles: float            # ns * calibrated clock (comparability with paper tables)
+    guard: int               # extra trivial ops included in the step
+    net_latency_ns: float    # latency minus guard * add-latency
+    device_kind: str
+    backend: str
+    jax_version: str
+    n_samples: int
+    measured_at: str = ""
+    notes: str = ""
+
+    def key(self) -> tuple:
+        return (self.device_kind, self.backend, self.jax_version,
+                self.opt_level, self.op, self.dtype)
+
+
+def current_environment() -> dict[str, str]:
+    dev = jax.devices()[0]
+    return {
+        "device_kind": dev.device_kind,
+        "backend": dev.platform,
+        "jax_version": jax.__version__,
+    }
+
+
+class LatencyDB:
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._records: dict[tuple, LatencyRecord] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # ----------------------------------------------------------------- CRUD
+    def add(self, rec: LatencyRecord) -> None:
+        self._records[rec.key()] = rec
+
+    def extend(self, recs: Iterable[LatencyRecord]) -> None:
+        for r in recs:
+            self.add(r)
+
+    def records(self) -> list[LatencyRecord]:
+        return list(self._records.values())
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def query(self, **filters: str) -> list[LatencyRecord]:
+        out = []
+        for r in self._records.values():
+            if all(getattr(r, k) == v for k, v in filters.items()):
+                out.append(r)
+        return out
+
+    def lookup_ns(self, op: str, opt_level: str = "O3", default: float | None = None,
+                  **filters: str) -> float | None:
+        recs = self.query(op=op, opt_level=opt_level, **filters)
+        if not recs:
+            return default
+        return sorted(recs, key=lambda r: r.measured_at)[-1].latency_ns
+
+    # ------------------------------------------------------------------- IO
+    def save(self, path: str | None = None) -> str:
+        path = path or self.path
+        assert path, "no path for LatencyDB.save"
+        dump_json({"saved_at": timestamp(),
+                   "records": [dataclasses.asdict(r) for r in self._records.values()]}, path)
+        return path
+
+    def load(self, path: str) -> None:
+        blob = load_json(path)
+        for raw in blob["records"]:
+            self.add(LatencyRecord(**raw))
+
+    # -------------------------------------------------------------- reports
+    def table_markdown(self, opt_levels: tuple[str, ...] = ("O3", "O0")) -> str:
+        """Table II analog: rows = ops, columns = Optimized / Non-Optimized."""
+        by_op: dict[tuple[str, str, str], dict[str, LatencyRecord]] = {}
+        for r in self._records.values():
+            by_op.setdefault((r.category, r.op, r.dtype), {})[r.opt_level] = r
+        rows = []
+        for (cat, op, dt), levels in sorted(by_op.items()):
+            row = [cat, op, dt]
+            for lv in opt_levels:
+                rec = levels.get(lv)
+                row.append(f"{rec.latency_ns:.1f}ns ({rec.cycles:.0f}cy)" if rec else "—")
+            rows.append(row)
+        headers = ["category", "op", "dtype"] + [
+            {"O3": "Optimized", "O0": "Non-Optimized"}.get(lv, lv) for lv in opt_levels]
+        return markdown_table(headers, rows)
+
+    def diff_markdown(self, key_a: str, key_b: str, field: str = "jax_version",
+                      opt_level: str = "O3", rel_threshold: float = 0.10) -> str:
+        """Table III analog: ops whose latency changed between two versions."""
+        a = {(r.op, r.dtype): r for r in self.query(opt_level=opt_level)
+             if getattr(r, field) == key_a}
+        b = {(r.op, r.dtype): r for r in self.query(opt_level=opt_level)
+             if getattr(r, field) == key_b}
+        rows = []
+        for k in sorted(set(a) & set(b)):
+            ra, rb = a[k], b[k]
+            if ra.latency_ns <= 0:
+                continue
+            rel = (rb.latency_ns - ra.latency_ns) / max(ra.latency_ns, 1e-9)
+            if abs(rel) >= rel_threshold:
+                rows.append([k[0], k[1], f"{ra.latency_ns:.1f}", f"{rb.latency_ns:.1f}",
+                             f"{100*rel:+.1f}%"])
+        return markdown_table(["op", "dtype", key_a, key_b, "delta"], rows)

@@ -1,0 +1,107 @@
+"""Suite runner: sweep the op registry across opt levels into a LatencyDB.
+
+This is the main entry point of the paper's tool (Section IV): for every
+instruction in the registry, build the dependent chain, compile it at each
+optimization level, and extract the per-op latency with the slope method.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Sequence
+
+import jax
+
+from repro.core import chains
+from repro.core.chains import OpSpec, chain_fn
+from repro.core.latency_db import LatencyDB, LatencyRecord, current_environment
+from repro.core.optlevels import OPT_LEVELS, compile_at_level
+from repro.core.timing import Timer
+from repro.utils import logger, timestamp
+
+# Chain lengths per opt level: eager dispatch is ~1e4x slower per op, so O0
+# uses short chains (the paper's -O0 numbers are likewise dominated by
+# unoptimized issue overhead). Long O3 chains push the per-op signal well
+# above host-timer noise; the slope uses min-statistics (noise floor).
+_CHAIN_LENS = {"O0": (2, 10), "O1": (64, 512), "O3": (64, 512)}
+_REPS = {"O0": 5, "O1": 30, "O3": 30}
+
+
+def _needs_x64(spec: OpSpec) -> bool:
+    return spec.requires_x64 or spec.dtype in ("int64", "uint64", "float64")
+
+
+def _x64_ctx(spec: OpSpec):
+    if _needs_x64(spec):
+        return jax.experimental.enable_x64()
+    return contextlib.nullcontext()
+
+
+def measure_op(spec: OpSpec, opt_level: str = "O3", timer: Timer | None = None) -> float:
+    """Median per-op latency in ns at the given optimization level."""
+    timer = timer or Timer()
+    n1, n2 = _CHAIN_LENS[opt_level]
+    if spec.max_chain is not None:
+        n1, n2 = min(n1, spec.max_chain // 3), min(n2, spec.max_chain)
+    reps = _REPS[opt_level]
+    with _x64_ctx(spec):
+        carry = spec.carry()
+        operands = spec.operand_arrays()
+
+        def fn_by_len(n: int) -> Callable:
+            return compile_at_level(chain_fn(spec, n), opt_level, carry, *operands)
+
+        m = timer.slope(fn_by_len, n1, n2, carry, *operands, reps=reps)
+    return max(m.median_ns, 0.0)
+
+
+def run_suite(registry: Sequence[OpSpec] | None = None,
+              opt_levels: Sequence[str] = OPT_LEVELS,
+              db: LatencyDB | None = None,
+              timer: Timer | None = None,
+              categories: Sequence[str] | None = None) -> LatencyDB:
+    """Measure every op at every level; returns/extends the LatencyDB."""
+    registry = list(registry if registry is not None else chains.default_registry())
+    if categories:
+        registry = [o for o in registry if o.category in categories]
+    db = db or LatencyDB()
+    timer = timer or Timer()
+    env = current_environment()
+    clock = timer.calibrate_clock_hz()
+
+    # Per-level 1-cycle-class baseline, used to net out guard ops. The add
+    # spec is itself an (add ^ xor) pair (collapse-proof), and both halves are
+    # in the same latency class, so baseline = measured_pair / 2.
+    base = next((o for o in chains.default_registry() if o.name == "add"), None)
+    add_ns = {lv: (measure_op(base, lv, timer) / (1 + base.guard) if base else 0.0)
+              for lv in opt_levels}
+
+    for spec in registry:
+        for lv in opt_levels:
+            try:
+                ns = measure_op(spec, lv, timer)
+            except Exception as e:  # noqa: BLE001 - record and continue the sweep
+                logger.warning("measure %s@%s failed: %s", spec.name, lv, e)
+                continue
+            net = max(ns - spec.guard * add_ns.get(lv, 0.0), 0.0)
+            db.add(LatencyRecord(
+                op=spec.name, category=spec.category, dtype=spec.dtype, opt_level=lv,
+                latency_ns=ns, mad_ns=0.0, cycles=ns * clock / 1e9, guard=spec.guard,
+                net_latency_ns=net, n_samples=_REPS[lv], measured_at=timestamp(),
+                notes=spec.notes, **env))
+        logger.info("measured %-22s %s", spec.name,
+                    " ".join(f"{lv}={db.lookup_ns(spec.name, lv, float('nan'), dtype=spec.dtype):8.1f}ns"
+                             for lv in opt_levels))
+    return db
+
+
+def clock_overhead(timer: Timer | None = None, opt_levels: Sequence[str] = OPT_LEVELS
+                   ) -> dict[str, float]:
+    """Fig. 5 analog: the cost of the measurement region itself, per level."""
+    timer = timer or Timer()
+    import jax.numpy as jnp
+    x = jnp.asarray(1.0, jnp.float32)
+    out = {}
+    for lv in opt_levels:
+        fn = compile_at_level(lambda v: v, lv, x)
+        out[lv] = timer.time_callable(fn, x, reps=_REPS[lv]).median_ns
+    return out

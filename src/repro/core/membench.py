@@ -1,0 +1,138 @@
+"""Memory-hierarchy probes (paper Section V-B3, Fig. 6, Table IV).
+
+The paper measures device-memory latency with a cold load, then L1/L2 hit
+latencies by re-loading a *different word of the same cache line* (so the
+compiler cannot fold the load), toggling L1 via compile flags. The portable
+analog used here is the classic **dependent pointer chase**: a permutation
+ring ``p`` is walked as ``i = p[i]``; each load's address depends on the
+previous load's *value*, so no prefetcher or compiler can overlap or elide
+them. Latency-per-load as a function of working-set size exposes every level
+of the hierarchy as a capacity cliff (CPU: L1/L2/L3/DRAM; TPU: VMEM vs HBM).
+
+The Pallas ``chase`` kernel (kernels/chase.py) runs the same probe *inside* a
+TPU kernel with BlockSpec-pinned VMEM residency — the shared-memory (Table IV)
+analog — and is validated here in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.timing import Timer
+from repro.utils import logger
+
+
+@dataclasses.dataclass(frozen=True)
+class MemPoint:
+    working_set_bytes: int
+    latency_ns: float       # steady-state per-load latency (hit in whichever level fits)
+    cold_latency_ns: float  # first-touch latency (the paper's 'global memory' number)
+    stride_bytes: int
+
+
+def _ring_permutation(n: int, seed: int = 0) -> np.ndarray:
+    """Random single-cycle permutation (sattolo), so the chase visits all slots."""
+    rng = np.random.RandomState(seed)
+    idx = np.arange(n, dtype=np.int32)
+    for i in range(n - 1, 0, -1):
+        j = rng.randint(0, i)
+        idx[i], idx[j] = idx[j], idx[i]
+    # idx is now a random permutation; convert to a cycle via pointer table
+    ring = np.empty(n, dtype=np.int32)
+    ring[idx[:-1]] = idx[1:]
+    ring[idx[-1]] = idx[0]
+    return ring
+
+
+def chase_fn(steps: int):
+    """jit-able dependent pointer chase: i_{k+1} = ring[i_k]."""
+
+    def chase(ring: jax.Array, start: jax.Array) -> jax.Array:
+        def body(_, p):
+            return ring[p]
+        return lax.fori_loop(0, steps, body, start)
+
+    return chase
+
+
+def measure_latency(working_set_bytes: int, line_bytes: int = 64,
+                    timer: Timer | None = None,
+                    steps: tuple[int, int] = (2048, 6144)) -> MemPoint:
+    """Per-load latency for a working set of the given size."""
+    timer = timer or Timer(warmup=2, reps=15)
+    n = max(working_set_bytes // line_bytes, 8)
+    # Pad each slot to one cache line so every chase step touches a new line
+    # (the paper's different-word-same-line trick inverted: we *want* misses
+    # beyond the level capacity, so slots are line-padded).
+    pad = line_bytes // 4
+    ring_np = _ring_permutation(n) * pad
+    full = np.zeros(n * pad, dtype=np.int32)
+    full[np.arange(n) * pad] = ring_np
+    ring = jnp.asarray(full)
+    start = jnp.asarray(0, jnp.int32)
+
+    n1, n2 = steps
+    f1 = jax.jit(chase_fn(n1))
+    f2 = jax.jit(chase_fn(n2))
+    # Cold: first execution after transfer (compile separately first).
+    f2_cold = jax.jit(chase_fn(n2))
+    f2_cold.lower(ring, start).compile()
+    import time
+    t0 = time.perf_counter_ns()
+    jax.block_until_ready(f2_cold(ring, start))
+    cold_ns = (time.perf_counter_ns() - t0) / n2
+
+    m1 = timer.time_callable(f1, ring, start)
+    m2 = timer.time_callable(f2, ring, start)
+    per_load = max((m2.median_ns - m1.median_ns) / (n2 - n1), 0.0)
+    return MemPoint(working_set_bytes=working_set_bytes, latency_ns=per_load,
+                    cold_latency_ns=cold_ns, stride_bytes=line_bytes)
+
+
+def sweep(working_sets: Sequence[int] | None = None, timer: Timer | None = None
+          ) -> list[MemPoint]:
+    """Fig. 6 analog: latency vs working-set size across the hierarchy."""
+    if working_sets is None:
+        working_sets = [1 << k for k in range(12, 26)]  # 4 KiB .. 32 MiB
+    pts = []
+    for ws in working_sets:
+        pt = measure_latency(ws, timer=timer)
+        logger.info("chase ws=%-10d hit=%6.2fns cold=%6.2fns", ws, pt.latency_ns,
+                    pt.cold_latency_ns)
+        pts.append(pt)
+    return pts
+
+
+def detect_levels(points: Sequence[MemPoint], jump: float = 1.6) -> list[dict]:
+    """Identify capacity cliffs: consecutive latency jumps >= ``jump``x."""
+    levels, cur = [], []
+    for prev, nxt in zip(points, points[1:]):
+        cur.append(prev)
+        if prev.latency_ns > 0 and nxt.latency_ns / max(prev.latency_ns, 1e-9) >= jump:
+            levels.append(cur)
+            cur = []
+    cur.append(points[-1])
+    levels.append(cur)
+    out = []
+    for i, grp in enumerate(levels):
+        out.append({
+            "level": i,
+            "capacity_bytes_lower_bound": grp[-1].working_set_bytes,
+            "hit_latency_ns": float(np.median([p.latency_ns for p in grp])),
+        })
+    return out
+
+
+def bandwidth_probe(size_bytes: int = 1 << 26, timer: Timer | None = None) -> float:
+    """Streaming-copy bandwidth in GB/s (paper Table I 'memory bandwidth' analog)."""
+    timer = timer or Timer(warmup=2, reps=10)
+    n = size_bytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    f = jax.jit(lambda v: v * 2.0 + 1.0)
+    m = timer.time_callable(f, x)
+    return (2 * size_bytes) / max(m.median_ns, 1.0)  # read + write, bytes/ns == GB/s

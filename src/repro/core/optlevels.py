@@ -1,0 +1,70 @@
+"""Compiler-optimization levels: the paper's -O0/-O1/-O2/-O3 axis, for XLA.
+
+The paper compiles every instruction under all four nvcc levels and reports
+Optimized (-O3) vs Non-Optimized (-O0). The JAX analog:
+
+* ``O0`` — eager op-by-op dispatch: no XLA fusion/simplification across ops,
+  every op pays full dispatch overhead (the "no optimization" execution mode).
+* ``O1`` — ``jit`` with XLA's backend optimizations dialed down via per-compile
+  ``compiler_options`` (whichever knobs the backend accepts; unknown options
+  degrade gracefully to default jit and are recorded as such).
+* ``O3`` — default ``jit``: the full XLA pipeline (fusion, algebraic
+  simplification, strength reduction — the effects the paper attributes to
+  `-O3`, e.g. div-by-pow2 becoming shifts, are performed here too).
+
+The CUDA-9-vs-10 comparison (paper Table III) becomes a jax/XLA-version key in
+the LatencyDB: run the same suite under two jaxlib versions and diff.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+
+from repro.utils import logger
+
+OPT_LEVELS = ("O0", "O1", "O3")
+
+# Candidate per-compile knobs for the "reduced optimization" level. XLA accepts
+# env-style option names through ``compiler_options``; unsupported names raise,
+# and we fall back in order.
+_O1_CANDIDATES: tuple[dict[str, Any], ...] = (
+    {"xla_backend_optimization_level": 0},
+    {"xla_cpu_enable_fast_math": False, "xla_llvm_disable_expensive_passes": True},
+    {"xla_llvm_disable_expensive_passes": True},
+)
+
+
+@functools.cache
+def _o1_options() -> dict[str, Any] | None:
+    def probe(opts: dict[str, Any]) -> bool:
+        try:
+            jax.jit(lambda x: x * x + x).lower(1.0).compile(compiler_options=opts)
+            return True
+        except Exception:  # noqa: BLE001 - unsupported option names raise generic errors
+            return False
+
+    for opts in _O1_CANDIDATES:
+        if probe(opts):
+            return opts
+    logger.warning("no supported O1 compiler options on this backend; O1 == O3")
+    return None
+
+
+def o1_option_string() -> str:
+    opts = _o1_options()
+    return "none(==O3)" if opts is None else ",".join(f"{k}={v}" for k, v in opts.items())
+
+
+def compile_at_level(fn: Callable[..., Any], level: str, *args: Any) -> Callable[..., Any]:
+    """Return an executable of ``fn`` at the requested optimization level."""
+    if level == "O0":
+        return fn  # eager dispatch
+    if level == "O1":
+        opts = _o1_options()
+        lowered = jax.jit(fn).lower(*args)
+        return lowered.compile(compiler_options=opts) if opts else lowered.compile()
+    if level == "O3":
+        return jax.jit(fn)
+    raise ValueError(f"unknown opt level {level!r}; choose from {OPT_LEVELS}")

@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticLoader, batch_for_step
+
+__all__ = ["DataConfig", "SyntheticLoader", "batch_for_step"]

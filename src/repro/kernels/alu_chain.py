@@ -1,0 +1,56 @@
+"""In-kernel dependent ALU chain: the paper's Fig. 3 timed block as a TPU kernel.
+
+The paper's PTX body is: load operands -> read clock -> one dependent op ->
+read clock -> store. The TPU analog puts an *unrolled dependent chain* inside
+a Pallas kernel body on a VMEM-resident tile, so the timed region (the whole
+kernel) contains only the chain plus one DMA in/out; latency is extracted with
+the same two-length slope as the host-level chains (core/measure.py), which
+cancels the DMA/launch overhead exactly like the paper's clock-overhead
+subtraction. On this container it runs in interpret mode for correctness
+validation; on TPU the same code lowers to a real kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import use_interpret
+
+
+def _chain_kernel(x_ref, a_ref, o_ref, *, n: int, op: str):
+    x = x_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    for _ in range(n):
+        if op == "fma":
+            x = x * a + a
+        elif op == "add":
+            x = x + a
+        elif op == "mul":
+            x = x * a
+        elif op == "rsqrt":
+            x = jax.lax.rsqrt(x) + a
+        elif op == "exp":
+            x = jnp.exp(-x) + a
+        else:
+            raise ValueError(op)
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "op", "interpret"))
+def alu_chain(x: jax.Array, a: jax.Array, *, n: int, op: str = "fma",
+              interpret: bool | None = None) -> jax.Array:
+    """x, a: [R, C] tiles (use (8, 128) for one VPU vreg on TPU)."""
+    interpret = use_interpret() if interpret is None else interpret
+    r, c = x.shape
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, n=n, op=op),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((r, c), lambda i: (0, 0)),
+                  pl.BlockSpec((r, c), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((r, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), x.dtype),
+        interpret=interpret,
+    )(x, a)

@@ -1,0 +1,44 @@
+"""In-kernel pointer chase: the memory-hierarchy probe as a TPU kernel.
+
+The host-level chase (core/membench.py) measures the *host* hierarchy; this
+kernel measures HBM->VMEM behaviour on TPU: the ring table is DMA'd into VMEM
+by the BlockSpec (resident probe, the paper's shared-memory/Table IV analog),
+and each step's address depends on the previous step's loaded value, so the
+chase cannot be pipelined — pure dependent-load latency. Rings larger than
+VMEM use memory_space=ANY so loads stream from HBM (the Fig. 6 analog).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import use_interpret
+
+
+def _chase_kernel(ring_ref, start_ref, o_ref, *, steps: int):
+    def body(_, p):
+        return pl.load(ring_ref, (pl.dslice(p, 1),))[0]
+
+    p0 = start_ref[0]
+    o_ref[0] = lax.fori_loop(0, steps, body, p0)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
+def chase(ring: jax.Array, start: jax.Array, *, steps: int,
+          interpret: bool | None = None) -> jax.Array:
+    """ring: [N] int32 single-cycle permutation; start: [1] int32."""
+    interpret = use_interpret() if interpret is None else interpret
+    (n,) = ring.shape
+    return pl.pallas_call(
+        functools.partial(_chase_kernel, steps=steps),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        interpret=interpret,
+    )(ring.astype(jnp.int32), start.astype(jnp.int32))

@@ -1,0 +1,28 @@
+"""Shared Pallas kernel helpers."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite mask value: -inf breaks max-subtraction on empty rows
+
+
+@functools.cache
+def use_interpret() -> bool:
+    """Pallas interpret mode: True off-TPU (this container), False on TPU."""
+    return jax.devices()[0].platform != "tpu"
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (hardware-aligned when
+    possible: preferred sizes are multiples of 128 for MXU/VPU lanes)."""
+    b = min(preferred, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)

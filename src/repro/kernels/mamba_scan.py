@@ -1,0 +1,71 @@
+"""Chunked selective-scan (Mamba S6) Pallas kernel.
+
+TPU adaptation of the CUDA selective-scan: the sequence is chunked so each
+chunk's x/dt/B/C tiles are DMA'd to VMEM once (grid walks chunks in the
+sequential minor dimension), while the [Dm, N] state persists in f32 VMEM
+scratch across chunks. Inside a chunk the recurrence runs as a fori_loop over
+time steps on fully vectorized [Dm, N] state — VPU-friendly, no gather/scatter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import cdiv, pick_block, use_interpret
+from repro.kernels.flash_attention import pl_scratch
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                 chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                      # [Dm, N]
+
+    def body(t, h):
+        xt = x_ref[0, t].astype(jnp.float32)                # [Dm]
+        dt = jax.nn.softplus(dt_ref[0, t].astype(jnp.float32))  # [Dm]
+        bt = b_ref[0, t].astype(jnp.float32)                # [N]
+        ct = c_ref[0, t].astype(jnp.float32)                # [N]
+        da = jnp.exp(dt[:, None] * a)                       # [Dm, N]
+        h = da * h + (dt * xt)[:, None] * bt[None, :]
+        y_ref[0, t] = (h @ ct).astype(y_ref.dtype)          # [Dm]
+        return h
+
+    h_ref[...] = lax.fori_loop(0, chunk, body, h_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, D: jax.Array, *, chunk: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    """x, dt: [Bz,S,Dm]; A: [Dm,N]; B,C: [Bz,S,N]; D: [Dm] -> y: [Bz,S,Dm]."""
+    interpret = use_interpret() if interpret is None else interpret
+    bsz, s, dm = x.shape
+    n = A.shape[1]
+    ch = pick_block(s, chunk)
+    num_c = cdiv(s, ch)
+
+    y = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=ch),
+        grid=(bsz, num_c),
+        in_specs=[
+            pl.BlockSpec((1, ch, dm), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, ch, dm), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((dm, n), lambda bi, ci: (0, 0)),
+            pl.BlockSpec((1, ch, n), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, ch, n), lambda bi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, dm), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, dm), x.dtype),
+        scratch_shapes=[pl_scratch((dm, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y + x * D[None, None].astype(x.dtype)

@@ -1,0 +1,322 @@
+"""Cell builders: one jit-able program per (arch x shape x mesh) dry-run cell.
+
+``input_specs`` follows the mandated pattern: weak-type-correct
+ShapeDtypeStruct stand-ins, shardable, no device allocation. ``build_cell``
+returns the step function plus in/out shardings so dryrun.py can
+``jit(...).lower(*specs).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.registry import SHAPES, ArchSpec, get
+from repro.launch.mesh import data_shards, total_chips
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig, Runtime
+from repro.parallel import sharding as shd
+
+BATCH_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                      # train | prefill | decode
+    fn: Callable                   # jit target
+    specs: tuple                   # positional ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    model_flops: float
+    cfg: ModelConfig
+    rt: Runtime
+
+
+def _batch_spec(mesh: Mesh, batch_size: int | None = None):
+    axes = tuple(a for a in BATCH_AXES if a in mesh.shape)
+    if batch_size is not None:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if batch_size % n != 0:
+            return None
+    return axes
+
+
+def runtime_for(cfg: ModelConfig, mesh: Mesh, seq: int, kind: str,
+                microbatch: int = 0) -> Runtime:
+    big = cfg.param_count()[0] > 5e10
+    return Runtime(
+        attn_impl="blockwise" if (kind != "decode" and seq >= 2048) else "auto",
+        block_k=1024 if seq >= 8192 else 512,
+        remat=kind == "train",
+        moe_groups=data_shards(mesh),
+        mamba_chunk=256 if seq >= 2048 else 64,
+        mlstm_chunk=256 if seq >= 2048 else 64,
+        xent_chunk=256,
+        max_cache_len=seq,
+    )
+
+
+def microbatches_for(cfg: ModelConfig) -> int:
+    n = cfg.param_count()[0]
+    if n > 2e11:
+        return 8
+    if n > 5e10:
+        return 4
+    return 1
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    init = encdec.init_encdec if cfg.n_encoder_layers else transformer.init_lm
+    return jax.eval_shape(lambda k: init(k, cfg), key)
+
+
+# ----------------------------------------------------------------- shardings
+def param_shardings(boxed, mesh: Mesh, rules: shd.ShardingRules):
+    return shd.param_shardings(boxed, mesh, rules)
+
+
+def opt_shardings(params_boxed, state_shapes, mesh: Mesh,
+                  rules: shd.ShardingRules):
+    """Optimizer-state shardings mirror the owning param's sharding."""
+    def for_param(p: shd.Param, st):
+        spec = rules.resolve(p.axes, p.value.shape, mesh)
+        if isinstance(st, dict) and set(st) == {"q", "scale"}:
+            # int8 moments: q has the param's shape (inherits its sharding);
+            # scale is [..., nblocks] — keep the last-axis sharding only if
+            # the block count still divides.
+            entries = list(spec) + [None] * (len(p.value.shape) - len(list(spec)))
+            s_entries = list(entries)
+            last = s_entries[-1] if s_entries else None
+            nb = st["scale"].shape[-1]
+            if last is not None:
+                size = 1
+                for a in ((last,) if isinstance(last, str) else last):
+                    size *= mesh.shape.get(a, 1)
+                if nb % size != 0:
+                    s_entries[-1] = None
+            return {"q": NamedSharding(mesh, P(*entries)),
+                    "scale": NamedSharding(mesh, P(*s_entries))}
+        return NamedSharding(mesh, spec)
+
+    leaf = lambda x: shd.is_param(x)
+    is_qs = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    m_sh = jax.tree_util.tree_map(for_param, params_boxed, state_shapes["m"],
+                                  is_leaf=leaf)
+    v_sh = jax.tree_util.tree_map(for_param, params_boxed, state_shapes["v"],
+                                  is_leaf=leaf)
+    return {"m": m_sh, "v": v_sh,
+            "count": NamedSharding(mesh, P())}
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch_axes,
+                    mode: str = "seq") -> Any:
+    """KV-cache shardings by leaf name: batch over data axes, SSM inner dims
+    over 'model', and the KV cache either ``seq``-sharded over 'model'
+    (flash-decode partial softmax) or ``head_dim``-sharded (split-K attention:
+    the decode-step dynamic-update-slice stays shard-local — §Perf knob)."""
+    def one(path, sds):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(sds.shape)
+        def div(i, ax):
+            if ax is None:
+                return False
+            size = 1
+            for a in ((ax,) if isinstance(ax, str) else ax):
+                size *= mesh.shape.get(a, 1)
+            return sds.shape[i] % size == 0 and size > 1
+        spec: list = [None] * nd
+        if nd >= 2 and div(1, batch_axes):
+            spec[1] = batch_axes        # [layers, batch, ...]
+        if name in ("k", "v", "ck", "cv") and nd == 5:
+            if mode == "head_dim" and div(4, "model"):
+                spec[4] = "model"       # split-K: local DUS, psum'd logits
+            elif div(2, "model"):
+                spec[2] = "model"       # cache seq (flash-decode combine)
+        elif name == "h" and nd == 4 and div(2, "model"):
+            spec[2] = "model"           # mamba inner
+        elif name == "conv" and nd == 4 and div(3, "model"):
+            spec[3] = "model"
+        elif name == "c" and nd == 5 and div(4, "model"):
+            spec[4] = "model"           # mlstm value dim
+        elif name in ("n",) and nd == 4 and div(3, "model"):
+            spec[3] = "model"
+        elif name in ("c", "n", "h", "m") and nd == 3 and div(2, "model"):
+            spec[2] = "model"           # slstm [layers,B,D]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# -------------------------------------------------------------- input specs
+def input_specs(arch: str, shape: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    spec = get(arch)
+    cfg = spec.config
+    seq, gbatch, kind = SHAPES[shape]
+    f = jax.ShapeDtypeStruct
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    d = cfg.d_model
+    out: dict[str, Any] = {}
+    if kind == "train":
+        if cfg.n_encoder_layers:
+            out["frames"] = f((gbatch, seq // 4, d), bf16)
+            out["tokens"] = f((gbatch, seq), i32)
+        elif cfg.input_kind == "patch_embeddings":
+            out["embeds"] = f((gbatch, seq, d), bf16)
+            out["positions"] = f((3, gbatch, seq), i32)
+        else:
+            out["tokens"] = f((gbatch, seq), i32)
+        out["labels"] = f((gbatch, seq), i32)
+    elif kind == "prefill":
+        if cfg.n_encoder_layers:
+            out["frames"] = f((gbatch, seq // 4, d), bf16)
+            out["tokens"] = f((gbatch, seq), i32)
+        elif cfg.input_kind == "patch_embeddings":
+            out["embeds"] = f((gbatch, seq, d), bf16)
+            out["positions"] = f((3, gbatch, seq), i32)
+        else:
+            out["tokens"] = f((gbatch, seq), i32)
+    else:  # decode
+        out["tokens"] = f((gbatch, 1), i32)
+        if cfg.mrope_sections:
+            out["positions"] = f((3, gbatch, 1), i32)
+    return out
+
+
+def _batch_shardings(specs: dict, mesh: Mesh) -> dict:
+    b = _batch_spec(mesh)
+    nb = 1
+    for a in b:
+        nb *= mesh.shape[a]
+    out = {}
+    for k, v in specs.items():
+        bdim = 1 if k == "positions" else 0
+        bspec = b if v.shape[bdim] % nb == 0 else None   # batch=1 cells replicate
+        spec = [None] * len(v.shape)
+        spec[bdim] = bspec
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+# -------------------------------------------------------------------- cells
+def build_cell(arch: str, shape: str, mesh: Mesh, rules: shd.ShardingRules,
+               *, microbatch: int | None = None,
+               rt_overrides: dict | None = None) -> Cell:
+    spec = get(arch)
+    cfg = spec.config
+    if shape in spec.skips:
+        raise ValueError(f"{arch}/{shape} skipped: {spec.skips[shape]}")
+    seq, gbatch, kind = SHAPES[shape]
+    rt = runtime_for(cfg, mesh, seq, kind)
+    if rt_overrides:
+        rt = dataclasses.replace(rt, **rt_overrides)
+    chips = total_chips(mesh)
+    total, active = cfg.param_count()
+    params = abstract_params(cfg)
+    p_sh = param_shardings(params, mesh, rules)
+    batch_specs = input_specs(arch, shape)
+    b_sh = _batch_shardings(batch_specs, mesh)
+    is_encdec = bool(cfg.n_encoder_layers)
+
+    if kind == "train":
+        mb = microbatch if microbatch is not None else microbatches_for(cfg)
+        ocfg = optim.AdamWConfig(
+            state_dtype="int8" if total > 2e11 else "float32")
+        ostate = jax.eval_shape(lambda p: optim.init_state(p, ocfg), params)
+        o_sh = opt_shardings(params, ostate, mesh, rules)
+
+        def loss_fn(p, batch):
+            if is_encdec:
+                return encdec.train_loss(p, batch, cfg, rt)
+            return transformer.train_loss(p, batch, cfg, rt)
+
+        def train_step(p, ost, batch):
+            def micro(g_acc, mbatch):
+                (l, mets), g = jax.value_and_grad(loss_fn, has_aux=True)(p, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return g_acc, l
+
+            if mb > 1:
+                split = jax.tree_util.tree_map(
+                    lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+                    if x.shape[0] == gbatch else
+                    x.reshape((mb,) + (x.shape[0],) + (x.shape[1] // mb,) + x.shape[2:]),
+                    batch)
+                g0 = jax.tree_util.tree_map(
+                    lambda v: jnp.zeros(v.shape, jnp.float32), p)
+                grads, losses = jax.lax.scan(micro, g0, split)
+                grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+                loss = jnp.mean(losses)
+            else:
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+            lr = optim.cosine_lr(ost["count"])
+            new_p, new_o = optim.apply_update(p, grads, ost, ocfg, lr)
+            return new_p, new_o, {"loss": loss}
+
+        metrics_sh = {"loss": NamedSharding(mesh, P())}
+        return Cell(arch=arch, shape=shape, kind=kind, fn=train_step,
+                    specs=(params, ostate, batch_specs),
+                    in_shardings=(p_sh, o_sh, b_sh),
+                    out_shardings=(p_sh, o_sh, metrics_sh),
+                    donate_argnums=(0, 1),
+                    model_flops=6.0 * active * gbatch * seq
+                    * (1 if not is_encdec else 1.0),
+                    cfg=cfg, rt=rt)
+
+    if kind == "prefill":
+        def prefill_fn(p, batch):
+            if is_encdec:
+                return encdec.prefill(p, cfg, rt, batch["frames"], batch["tokens"])
+            return transformer.prefill(p, cfg, rt, tokens=batch.get("tokens"),
+                                       embeds=batch.get("embeds"),
+                                       positions=batch.get("positions"))
+
+        # cache sharding from output shapes
+        cache_shapes = jax.eval_shape(prefill_fn, params, batch_specs)[1]
+        c_sh = cache_shardings(cache_shapes, mesh, _batch_spec(mesh),
+                               mode=rt.cache_shard)
+        logits_sh = NamedSharding(mesh, P(_batch_spec(mesh, gbatch), None))
+        return Cell(arch=arch, shape=shape, kind=kind, fn=prefill_fn,
+                    specs=(params, batch_specs),
+                    in_shardings=(p_sh, b_sh),
+                    out_shardings=(logits_sh, c_sh),
+                    donate_argnums=(),
+                    model_flops=2.0 * active * gbatch * seq, cfg=cfg, rt=rt)
+
+    # decode
+    bspec = _batch_spec(mesh, gbatch)
+    if is_encdec:
+        cache_shapes = jax.eval_shape(
+            lambda: encdec.init_cache(cfg, gbatch, seq, seq // 4, cfg.cdtype))
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, gbatch, seq, cfg.cdtype))
+    c_sh = cache_shardings(cache_shapes, mesh, bspec, mode=rt.cache_shard)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(p, cache, batch, pos):
+        if is_encdec:
+            return encdec.decode_step(p, cache, batch["tokens"], pos, cfg, rt)
+        return transformer.decode_step(p, cache, batch["tokens"], pos, cfg, rt,
+                                       positions=batch.get("positions"))
+
+    logits_sh = NamedSharding(mesh, P(bspec, None))
+    return Cell(arch=arch, shape=shape, kind=kind, fn=decode_fn,
+                specs=(params, cache_shapes, input_specs(arch, shape), pos_spec),
+                in_shardings=(p_sh, c_sh, _batch_shardings(input_specs(arch, shape), mesh),
+                              NamedSharding(mesh, P())),
+                out_shardings=(logits_sh, c_sh),
+                donate_argnums=(1,),
+                model_flops=2.0 * active * gbatch, cfg=cfg, rt=rt)

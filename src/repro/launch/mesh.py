@@ -1,0 +1,37 @@
+"""Production mesh definition (assignment-mandated shapes).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int = 0) -> Mesh:
+    """Small meshes for tests/examples: (data, model) over available devices."""
+    model = model_parallel or (2 if devices % 2 == 0 and devices > 1 else 1)
+    data = devices // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def data_shards(mesh: Mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        n *= mesh.shape.get(ax, 1)
+    return n
+
+
+def total_chips(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

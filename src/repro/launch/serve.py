@@ -1,0 +1,54 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Loads (or random-inits) the arch's reduced config and serves a batch of
+synthetic requests through the prefill+decode engine.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.registry import all_arch_ids, get
+from repro.models import transformer
+from repro.models.config import Runtime
+from repro.serving import Engine
+from repro.utils import logger
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_arch_ids())
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get(args.arch).smoke
+    rt = Runtime(remat=False, moe_groups=1, mamba_chunk=16, mlstm_chunk=16)
+    params = transformer.init_lm(jax.random.PRNGKey(0), cfg)
+    if args.checkpoint_dir:
+        mgr = CheckpointManager(args.checkpoint_dir)
+        step, (params, _) = mgr.restore((params, None))
+        logger.info("restored step %d from %s", step, args.checkpoint_dir)
+
+    eng = Engine(params, cfg, rt)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab_size, size=rng.randint(4, 16)).tolist()
+               for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, max_new=args.max_new,
+                       temperature=args.temperature)
+    dt = time.perf_counter() - t0
+    logger.info("%d requests x %d new tokens in %.0f ms (%.0f tok/s)",
+                args.requests, args.max_new, dt * 1e3, out.tokens.size / dt)
+    for i in range(min(3, args.requests)):
+        print(f"req{i}: {out.tokens[i].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models import blocks, common, encdec, ssm, transformer, xlstm
+from repro.models.config import Layer, ModelConfig, Runtime
+
+__all__ = ["blocks", "common", "encdec", "ssm", "transformer", "xlstm",
+           "Layer", "ModelConfig", "Runtime"]

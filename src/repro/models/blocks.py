@@ -1,0 +1,291 @@
+"""Attention / MLP / MoE blocks (init + apply), logical-axis annotated."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common
+from repro.models.config import ModelConfig, Runtime
+from repro.parallel.sharding import Param, annotate, gather_weight
+
+Params = dict[str, Any]
+
+
+# =========================================================== attention block
+def init_attn(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm": Param(jnp.ones((d,), cfg.pdtype), ("embed",)),
+        "wq": common.dense_param(ks[0], d, h * hd, ("embed", "heads", "head_dim"),
+                                 cfg.pdtype, shape=(d, h, hd)),
+        "wk": common.dense_param(ks[1], d, kh * hd, ("embed", "kv_heads", "head_dim"),
+                                 cfg.pdtype, shape=(d, kh, hd)),
+        "wv": common.dense_param(ks[2], d, kh * hd, ("embed", "kv_heads", "head_dim"),
+                                 cfg.pdtype, shape=(d, kh, hd)),
+        "wo": common.dense_param(ks[3], h * hd, d, ("heads", "head_dim", "embed"),
+                                 cfg.pdtype, shape=(h, hd, d)),
+    }
+    return p
+
+
+def _w(p: Params, name: str, cd, rt: Runtime | None = None):
+    val = p[name].value.astype(cd)
+    if rt is not None and rt.fsdp_gather_weights:
+        val = gather_weight(val, p[name].axes)
+    return val
+
+
+def _project_qkv(p: Params, x, cfg: ModelConfig, rt: Runtime | None = None):
+    cd = cfg.cdtype
+    q = jnp.einsum("bsd,dhk->bshk", x, _w(p, "wq", cd, rt))
+    k = jnp.einsum("bsd,dhk->bshk", x, _w(p, "wk", cd, rt))
+    v = jnp.einsum("bsd,dhk->bshk", x, _w(p, "wv", cd, rt))
+    return q, k, v
+
+
+def _rope(cfg: ModelConfig, q, k, positions):
+    if positions is None:
+        return q, k
+    if cfg.mrope_sections is not None:
+        q = common.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = common.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _annotate_qkv(cfg: ModelConfig, q, k, v):
+    if cfg.attn_parallelism == "heads":
+        q = annotate(q, "batch", "seq", "act_heads", None)
+        k = annotate(k, "batch", "seq", "act_heads", None)
+        v = annotate(v, "batch", "seq", "act_heads", None)
+    else:  # context parallel: shard q rows, replicate kv heads
+        q = annotate(q, "batch", "cp_seq", None, None)
+        k = annotate(k, "batch", None, None, None)
+        v = annotate(v, "batch", None, None, None)
+    return q, k, v
+
+
+def attn_train(p: Params, x, cfg: ModelConfig, rt: Runtime, positions,
+               *, causal: bool = True, kv: jax.Array | None = None,
+               kv_positions=None):
+    """Full-sequence attention (train / prefill). x: [B,S,D].
+
+    ``kv``: optional encoder memory for cross-attention (bidirectional).
+    """
+    h = common.rmsnorm(x, p["norm"].value) if cfg.norm == "rmsnorm" else x
+    src = h if kv is None else kv
+    q = jnp.einsum("bsd,dhk->bshk", h, _w(p, "wq", cfg.cdtype, rt))
+    k = jnp.einsum("bsd,dhk->bshk", src, _w(p, "wk", cfg.cdtype, rt))
+    v = jnp.einsum("bsd,dhk->bshk", src, _w(p, "wv", cfg.cdtype, rt))
+    if kv is None:
+        q, k = _rope(cfg, q, k, positions)
+    q, k, v = _annotate_qkv(cfg, q, k, v)
+    out = common.attention(q, k, v, causal=causal and kv is None,
+                           impl=rt.attn_impl, block_k=rt.block_k,
+                           p_dtype=jnp.dtype(rt.attn_p_dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, _w(p, "wo", cfg.cdtype, rt))
+    return x + annotate(y, "batch", "seq", None), (k, v)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, kh, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kh, hd), dtype),
+    }
+
+
+def attn_decode(p: Params, x, cache: Params, pos, cfg: ModelConfig, rt: Runtime,
+                positions=None):
+    """One-token step. x: [B,1,D]; cache k/v: [B,Smax,KH,hd]; pos: scalar."""
+    b = x.shape[0]
+    h = common.rmsnorm(x, p["norm"].value) if cfg.norm == "rmsnorm" else x
+    q, k, v = _project_qkv(p, h, cfg)
+    if positions is None:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k = _rope(cfg, q, k, positions)
+    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    if rt.cache_shard == "head_dim":
+        # split-K layout: the in-place cache write stays shard-local (a DUS
+        # into a seq-sharded buffer makes GSPMD all-gather the whole cache —
+        # measured 16 GiB/step on jamba long_500k; §Perf).
+        ck = annotate(ck, "batch", None, None, "kv_hd")
+        cv = annotate(cv, "batch", None, None, "kv_hd")
+    elif cfg.attn_parallelism == "heads":
+        ck = annotate(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = annotate(cv, "batch", "kv_seq", "kv_heads", None)
+    else:
+        ck = annotate(ck, "batch", "kv_seq", None, None)
+        cv = annotate(cv, "batch", "kv_seq", None, None)
+    out = common.decode_attention(q[:, 0], ck, cv, kv_len=pos + 1)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].value.astype(cfg.cdtype))[:, None]
+    return x + y, {"k": ck, "v": cv}
+
+
+def attn_cross_decode(p: Params, x, mem_kv, cfg: ModelConfig):
+    """Cross-attention decode step against precomputed encoder memory."""
+    h = common.rmsnorm(x, p["norm"].value)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].value.astype(cfg.cdtype))
+    k, v = mem_kv
+    out = common.decode_attention(q[:, 0], k, v, kv_len=k.shape[1])
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].value.astype(cfg.cdtype))[:, None]
+    return x + y
+
+
+# ================================================================= MLP block
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": Param(jnp.ones((d,), cfg.pdtype), ("embed",)),
+        "wg": common.dense_param(ks[0], d, f, ("embed", "mlp"), cfg.pdtype),
+        "wu": common.dense_param(ks[1], d, f, ("embed", "mlp"), cfg.pdtype),
+        "wd": common.dense_param(ks[2], f, d, ("mlp", "embed"), cfg.pdtype),
+    }
+
+
+def mlp_apply(p: Params, x, cfg: ModelConfig, rt: Runtime | None = None):
+    h = common.rmsnorm(x, p["norm"].value)
+    cd = cfg.cdtype
+    g = jnp.einsum("bsd,df->bsf", h, _w(p, "wg", cd, rt))
+    u = jnp.einsum("bsd,df->bsf", h, _w(p, "wu", cd, rt))
+    g = annotate(jax.nn.silu(g) * u, "batch", "seq", "act_mlp")
+    y = jnp.einsum("bsf,fd->bsd", g, _w(p, "wd", cd, rt))
+    return x + annotate(y, "batch", "seq", None)
+
+
+# ================================================================= MoE block
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm": Param(jnp.ones((d,), cfg.pdtype), ("embed",)),
+        "router": common.dense_param(ks[0], d, e, ("embed", None), cfg.pdtype),
+        "wg": common.dense_param(ks[1], d, f, ("experts", "embed", "expert_mlp"),
+                                 cfg.pdtype, shape=(e, d, f)),
+        "wu": common.dense_param(ks[2], d, f, ("experts", "embed", "expert_mlp"),
+                                 cfg.pdtype, shape=(e, d, f)),
+        "wd": common.dense_param(ks[3], f, d, ("experts", "expert_mlp", "embed"),
+                                 cfg.pdtype, shape=(e, f, d)),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(ks[4], cfg)
+    return p
+
+
+def _dispatch_indices(expert_idx: jax.Array, n_experts: int, capacity: int):
+    """Sort-based dispatch within each group. expert_idx: [G, N] -> slots.
+
+    Returns (slot [G,N] in [0, E*C] with E*C == dropped, inv_order [G,N]).
+    """
+    g, n = expert_idx.shape
+    order = jnp.argsort(expert_idx, axis=-1, stable=True)          # [G,N]
+    sorted_e = jnp.take_along_axis(expert_idx, order, axis=-1)
+    gi = jnp.arange(g)[:, None]
+    counts = jnp.zeros((g, n_experts), jnp.int32).at[gi, expert_idx].add(1)
+    starts = jnp.cumsum(counts, axis=-1) - counts                  # exclusive
+    pos_in_e = jnp.arange(n)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    keep = pos_in_e < capacity
+    slot_sorted = jnp.where(keep, sorted_e * capacity + pos_in_e, n_experts * capacity)
+    # unsort the slot assignment back to token order
+    slot = jnp.zeros((g, n), jnp.int32).at[gi, order].set(slot_sorted)
+    return slot
+
+
+def moe_apply(p: Params, x, cfg: ModelConfig, rt: Runtime):
+    """Token-choice top-k MoE with sort-based capacity dispatch.
+
+    Tokens are regrouped as [G, N/G] with G == data shards so routing stays
+    shard-local; the dispatch scatter across the expert-sharded buffer is the
+    EP boundary (GSPMD emits the all-to-all/all-gather there).
+    """
+    b, s, d = x.shape
+    e, k, cd = cfg.n_experts, cfg.top_k, cfg.cdtype
+    h = common.rmsnorm(x, p["norm"].value)
+    n_tok = b * s
+    if rt.moe_gather_decode and n_tok <= 256:
+        return _moe_gather_few_tokens(p, x, h, cfg)
+    g = rt.moe_groups if n_tok % max(rt.moe_groups, 1) == 0 else 1
+    ng = n_tok // g
+    xt = annotate(h.reshape(g, ng, d), "batch", None, None)
+
+    logits = jnp.einsum("gnd,de->gne", xt.astype(jnp.float32),
+                        p["router"].value.astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(gates, k)                             # [G,N,k]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    cap = max(int(cfg.capacity_factor * ng / e) // 8 * 8, 8)
+    gi = jnp.arange(g)[:, None]
+    out = jnp.zeros((g, ng, d), cd)
+    for slot_k in range(k):
+        slot = _dispatch_indices(top_e[..., slot_k], e, cap)       # [G,N]
+        buf = jnp.zeros((g, e * cap + 1, d), cd)
+        buf = buf.at[gi, slot].set(xt.astype(cd), mode="drop")
+        ein = annotate(buf[:, :e * cap].reshape(g, e, cap, d),
+                       "batch", "experts", None, None)
+        hg = jnp.einsum("gecd,edf->gecf", ein, p["wg"].value.astype(cd))
+        hu = jnp.einsum("gecd,edf->gecf", ein, p["wu"].value.astype(cd))
+        hh = annotate(jax.nn.silu(hg) * hu, "batch", "experts", None, None)
+        eout = jnp.einsum("gecf,efd->gecd", hh, p["wd"].value.astype(cd))
+        if rt.moe_combine_reshard:
+            # Reshard expert outputs back to token-major BEFORE the combine
+            # gather: GSPMD then moves each token's row once (all-to-all
+            # shaped) instead of all-gathering the whole [G,E,C,D] buffer to
+            # every model shard — §Perf knob for the EP return path.
+            eout = annotate(eout, "batch", None, None, None)
+        flat = jnp.concatenate(
+            [eout.reshape(g, e * cap, d), jnp.zeros((g, 1, d), cd)], axis=1)
+        gathered = jnp.take_along_axis(flat, slot[..., None], axis=1)   # [G,N,D]
+        out = out + gathered * top_w[..., slot_k, None].astype(cd)
+
+    y = out.reshape(b, s, d)
+    if "shared" in p:
+        # shared expert runs densely on all tokens; reuse mlp without residual
+        y = y + (mlp_apply(p["shared"], x, cfg) - x)
+    aux = _load_balance_loss(gates, top_e, e)
+    return x + annotate(y, "batch", "seq", None), aux
+
+
+def _moe_gather_few_tokens(p: Params, x, h, cfg: ModelConfig):
+    """Decode-path MoE: gather ONLY the routed experts' weights.
+
+    Dense capacity dispatch reads every expert's FFN from HBM even for one
+    token; at batch<=256 tokens it is strictly cheaper to move k expert
+    weight slices per token than all E of them — this is what drops the
+    long_500k/decode collective+memory terms (§Perf)."""
+    b, s, d = x.shape
+    k, cd = cfg.top_k, cfg.cdtype
+    hf = h.reshape(b * s, d)
+    logits = jnp.einsum("nd,de->ne", hf.astype(jnp.float32),
+                        p["router"].value.astype(jnp.float32))
+    top_w, top_e = lax.top_k(jax.nn.softmax(logits, -1), k)      # [N,k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    wg = p["wg"].value[top_e]        # [N,k,D,F] gathered slices
+    wu = p["wu"].value[top_e]
+    wd = p["wd"].value[top_e]
+    hg = jnp.einsum("nd,nkdf->nkf", hf, wg.astype(cd))
+    hu = jnp.einsum("nd,nkdf->nkf", hf, wu.astype(cd))
+    eo = jnp.einsum("nkf,nkfd->nkd", jax.nn.silu(hg) * hu, wd.astype(cd))
+    y = jnp.einsum("nk,nkd->nd", top_w.astype(cd), eo).reshape(b, s, d)
+    if "shared" in p:
+        y = y + (mlp_apply(p["shared"], x, cfg) - x)
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def _load_balance_loss(gates, top_e, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss."""
+    me = jnp.mean(gates, axis=(0, 1))                      # [E]
+    g, n, k = top_e.shape
+    gi = jnp.arange(g)[:, None, None]
+    counts = jnp.zeros((g, n_experts), jnp.float32).at[
+        jnp.broadcast_to(gi, top_e.shape), top_e].add(1.0)
+    ce = jnp.mean(counts, axis=0) / (n * k)                # [E]
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, apply_update, cosine_lr,
+                               dequantize_i8, global_norm, init_state,
+                               quantize_i8)
+
+__all__ = ["AdamWConfig", "apply_update", "cosine_lr", "dequantize_i8",
+           "global_norm", "init_state", "quantize_i8"]

@@ -1,0 +1,166 @@
+"""AdamW with optional int8-quantized moments (blockwise scales).
+
+The int8 state is the distributed-optimization trick that lets llama3-405b
+train on 16 GiB/chip HBM: m and v are stored as int8 with one f32 scale per
+128-element block (dynamic quantization, re-quantized each step). Error is
+bounded by the block max; tests check the quantized optimizer tracks the f32
+one within tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import Param, is_param
+
+BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # "float32" | "int8"
+
+
+# ------------------------------------------------------------- quantization
+# Shape-preserving: q keeps the param's shape (so it inherits the param's
+# sharding); scales are per 128-block along the last axis. 1-D params (norms,
+# biases) stay f32 — they are negligible memory.
+def quantize_i8(x: jax.Array):
+    if x.ndim < 2:
+        return x.astype(jnp.float32)
+    last = x.shape[-1]
+    if last % BLOCK == 0:
+        nb = last // BLOCK
+        blocks = x.reshape(x.shape[:-1] + (nb, BLOCK))
+        scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0        # [..., nb]
+        denom = jnp.repeat(jnp.maximum(scale, 1e-20), BLOCK, axis=-1)
+    else:
+        scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0  # [..., 1]
+        denom = jnp.broadcast_to(jnp.maximum(scale, 1e-20), x.shape)
+    q = jnp.round(x / denom.reshape(x.shape)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_i8(qs, shape: tuple[int, ...]) -> jax.Array:
+    if not isinstance(qs, dict):
+        return qs
+    q, scale = qs["q"].astype(jnp.float32), qs["scale"]
+    last = shape[-1]
+    if last % BLOCK == 0 and scale.shape[-1] == last // BLOCK:
+        mult = jnp.repeat(scale, BLOCK, axis=-1)
+    else:
+        mult = jnp.broadcast_to(scale, shape)
+    return q * mult.reshape(shape)
+
+
+# ------------------------------------------------------------------- optimizer
+def init_state(params: Any, cfg: AdamWConfig) -> dict[str, Any]:
+    def zeros_like_leaf(p):
+        v = p.value if is_param(p) else p
+        z = jnp.zeros(v.shape, jnp.float32)
+        if cfg.state_dtype == "int8":
+            return quantize_i8(z)
+        return z
+
+    leaf = lambda x: is_param(x)
+    return {
+        "m": jax.tree_util.tree_map(zeros_like_leaf, params, is_leaf=leaf),
+        "v": jax.tree_util.tree_map(zeros_like_leaf, params, is_leaf=leaf),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(grads: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+
+
+def apply_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0) -> tuple[Any, dict]:
+    """One AdamW step on a (possibly boxed) param tree."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        pv = p.value if is_param(p) else p
+        gf = g.value.astype(jnp.float32) if is_param(g) else g.astype(jnp.float32)
+        gf = gf * clip
+        mf = dequantize_i8(m, pv.shape)
+        # v is stored in sqrt domain when quantized: halves the dynamic range
+        # an int8 block must span, which is what keeps the quantized optimizer
+        # tracking f32 (tested).
+        vf = dequantize_i8(v, pv.shape)
+        if isinstance(v, dict):
+            vf = vf * vf
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gf
+        vf = cfg.b2 * vf + (1 - cfg.b2) * gf * gf
+        mh = mf / b1c
+        vh = vf / b2c
+        wd = cfg.weight_decay if pv.ndim >= 2 else 0.0   # no decay on norms/biases
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + wd * pv.astype(jnp.float32)
+        new_p = (pv.astype(jnp.float32) - lr * step).astype(pv.dtype)
+        if cfg.state_dtype == "int8" and pv.ndim >= 2:
+            m_out, v_out = quantize_i8(mf), quantize_i8(jnp.sqrt(vf))
+        else:
+            m_out, v_out = mf, vf
+        boxed = Param(new_p, p.axes) if is_param(p) else new_p
+        return boxed, m_out, v_out
+
+    leaf = lambda x: is_param(x)
+    flat_p, tdef = jax.tree_util.tree_flatten(params, is_leaf=leaf)
+    flat_g = jax.tree_util.tree_leaves(grads, is_leaf=leaf)
+    m_leaves = _state_leaves(state["m"])
+    v_leaves = _state_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, m_leaves, v_leaves)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+        "v": jax.tree_util.tree_unflatten(tdef, [o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state
+
+
+def _state_leaves(tree: Any) -> list:
+    """Leaves of an optimizer-state tree, keeping int8 {q,scale} dicts whole."""
+    def is_qs(x):
+        return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+    return jax.tree_util.tree_leaves(tree, is_leaf=is_qs) if _has_qs(tree) else \
+        jax.tree_util.tree_leaves(tree)
+
+
+def _has_qs(tree: Any) -> bool:
+    found = []
+
+    def walk(x):
+        if isinstance(x, dict) and set(x.keys()) == {"q", "scale"}:
+            found.append(True)
+            return None
+        return None
+    jax.tree_util.tree_map(
+        walk, tree,
+        is_leaf=lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "scale"})
+    return bool(found)
+
+
+def cosine_lr(step: jax.Array, *, base: float = 1.0, warmup: int = 100,
+              total: int = 10_000, min_frac: float = 0.1) -> jax.Array:
+    """LR multiplier: linear warmup then cosine decay."""
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base * jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,9 @@
+from repro.parallel import sharding
+from repro.parallel.sharding import (Param, ShardingRules, annotate, boxed_axes,
+                                     is_param, lm_rules, param_shardings, rebox,
+                                     spec_tree, unbox, use_sharding,
+                                     with_layer_axis)
+
+__all__ = ["sharding", "Param", "ShardingRules", "annotate", "boxed_axes",
+           "is_param", "lm_rules", "param_shardings", "rebox", "spec_tree",
+           "unbox", "use_sharding", "with_layer_axis"]

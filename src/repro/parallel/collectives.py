@@ -1,0 +1,118 @@
+"""Explicit collectives beyond GSPMD: quantized gradient all-reduce with
+error feedback, and a ppermute-overlapped collective matmul.
+
+These are the distributed-optimization tricks layer:
+
+* ``quantized_psum`` — int8 gradient all-reduce inside shard_map. Gradients
+  are quantized per 128-block, summed in int32... actually summed in f32 of
+  dequantized values (ring psum of int8 payloads would need custom reduce;
+  XLA psum operates on the dequantized tensor but the WIRE cost is what the
+  int8 all-gather stage pays). We implement the standard 2-phase algorithm:
+  reduce-scatter in f32 on 1/N of the tensor, then all-gather the quantized
+  shard — wire bytes drop ~4x vs f32 all-gather phase. Residual error is
+  kept host-side per step (error feedback) so the compression is unbiased
+  over time.
+* ``collective_matmul`` — TP matmul where the all-gather of the activations
+  is replaced by a ring of ppermutes overlapped with partial matmuls
+  (Wang et al.; the TPU "collective matmul" pattern). Verifiable in HLO: no
+  all-gather, N-1 collective-permutes instead.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim.adamw import dequantize_i8, quantize_i8
+
+
+# ------------------------------------------------------------ quantized psum
+def quantized_psum_mean(grads: Any, mesh: Mesh, axis: str = "data",
+                        error: Any = None) -> tuple[Any, Any]:
+    """Mean-reduce gradients over ``axis`` with int8-compressed all-gather
+    phase + error feedback. Returns (reduced, new_error)."""
+    if error is None:
+        error = jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                       grads)
+
+    n = mesh.shape[axis]
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if g.ndim < 2 or g.shape[0] % n != 0:
+            out = lax.pmean(gf, axis)
+            return out.astype(g.dtype), jnp.zeros_like(gf)
+        # phase 1: reduce-scatter exact (f32)
+        shard = lax.psum_scatter(gf, axis, scatter_dimension=0, tiled=True) / n
+        # phase 2: quantize the owned shard, all-gather int8 + scales
+        qs = quantize_i8(shard)
+        if isinstance(qs, dict):
+            deq_shard = dequantize_i8(qs, shard.shape)
+            gathered_q = lax.all_gather(qs["q"], axis, axis=0, tiled=True)
+            gathered_s = lax.all_gather(qs["scale"], axis, axis=0, tiled=True)
+            out = dequantize_i8({"q": gathered_q, "scale": gathered_s}, gf.shape)
+        else:
+            deq_shard = shard
+            out = lax.all_gather(shard, axis, axis=0, tiled=True)
+        # error feedback: what our shard lost to quantization, re-injected
+        # next step (stored only for the owned shard rows).
+        err_shard = shard - deq_shard
+        new_e = jnp.zeros_like(gf).at[:shard.shape[0]].set(err_shard)
+        return out.astype(g.dtype), new_e
+
+    def mapped(gs, es):
+        pairs = jax.tree_util.tree_map(one, gs, es)
+        is_pair = lambda x: isinstance(x, tuple) and len(x) == 2
+        outs = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is_pair)
+        errs = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is_pair)
+        return outs, errs
+
+    specs = jax.tree_util.tree_map(lambda _: P(), grads)
+    fn = shard_map(mapped, mesh=mesh, in_specs=(specs, specs),
+                   out_specs=(specs, specs), check_rep=False)
+    return fn(grads, error)
+
+
+# --------------------------------------------------------- collective matmul
+def collective_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
+                      axis: str = "model") -> jax.Array:
+    """TP matmul with the activation all-gather replaced by a ppermute ring.
+
+    x: [B, D] sharded on dim 1 over ``axis``; w: [D, F] column-sharded on
+    dim 1. Each device computes its output column shard y[:, f_j] =
+    sum_k x_k @ W[rows_k, f_j] by rotating x shards around the ring and
+    multiplying against the matching local row block — every step overlaps
+    one ppermute with one partial matmul (no all-gather in the HLO).
+    """
+    n = mesh.shape[axis]
+
+    def body(xs, ws):                  # xs: [B, D/n]; ws: [D, F/n] (local)
+        dn = xs.shape[1]
+        wsr = ws.reshape(n, dn, ws.shape[-1])
+        perm = [(j, (j + 1) % n) for j in range(n)]
+        src = lax.axis_index(axis)
+
+        def step(i, carry):
+            acc, cur = carry
+            k = (src - i) % n          # origin of the shard we currently hold
+            acc = acc + cur @ wsr[k]
+            return acc, lax.ppermute(cur, axis, perm)
+
+        acc0 = jnp.zeros((xs.shape[0], ws.shape[-1]), xs.dtype)
+        acc, cur = lax.fori_loop(0, n - 1, step, (acc0, xs))
+        k = (src - (n - 1)) % n
+        return acc + cur @ wsr[k]
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(None, axis), P(None, axis)),
+                   out_specs=P(None, axis), check_rep=False)
+    return fn(x, w)
+
+
+def reference_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    return x @ w.reshape(-1, w.shape[-1]) if w.ndim == 3 else x @ w

@@ -1,0 +1,210 @@
+"""Logical-axis sharding: DP / FSDP / TP / EP / CP / SP on the production mesh.
+
+Models annotate parameters (via :class:`Param` boxes) and activations (via
+:func:`annotate`) with *logical* axis names; a :class:`ShardingRules` table
+resolves those to mesh axes. Resolution enforces even divisibility (GSPMD
+rejects uneven input shardings — verified empirically) and falls back to
+replication otherwise, so e.g. 40 query heads on a 16-way model axis
+automatically degrade to the context-parallel attention path (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Param boxes
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """A parameter leaf tagged with logical axis names (one per dim)."""
+
+    value: Any
+    axes: tuple[str | None, ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], tuple(aux))
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def unbox(tree: Any) -> Any:
+    """Strip Param boxes -> raw array pytree."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def boxed_axes(tree: Any) -> Any:
+    """Matching pytree of logical-axes tuples."""
+    return jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def rebox(values: Any, axes: Any) -> Any:
+    leaves_v = jax.tree_util.tree_leaves(values)
+    leaves_a, tda = jax.tree_util.tree_flatten(axes, is_leaf=_is_axes_leaf)
+    assert len(leaves_v) == len(leaves_a), (len(leaves_v), len(leaves_a))
+    return jax.tree_util.tree_unflatten(
+        tda, [Param(v, a) for v, a in zip(leaves_v, leaves_a)])
+
+
+def with_layer_axis(tree: Any, name: str = "layers") -> Any:
+    """After vmap-stacked init, prefix every Param's axes with ``name``."""
+    return jax.tree_util.tree_map(
+        lambda p: Param(p.value, (name,) + p.axes), tree, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+MeshAxes = tuple[str, ...] | str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axes. Missing names replicate."""
+
+    mapping: Mapping[str, MeshAxes]
+
+    def resolve(self, axes: Sequence[str | None], shape: Sequence[int] | None,
+                mesh: Mesh) -> P:
+        used: set[str] = set()
+        out: list[MeshAxes] = []
+        for i, name in enumerate(axes):
+            m = self.mapping.get(name) if name else None
+            if m is None:
+                out.append(None)
+                continue
+            parts = (m,) if isinstance(m, str) else tuple(m)
+            parts = tuple(p for p in parts if p in mesh.shape and p not in used)
+            if not parts:
+                out.append(None)
+                continue
+            size = int(np.prod([mesh.shape[p] for p in parts]))
+            if shape is not None and shape[i] % size != 0:
+                # uneven -> replicate (GSPMD requires divisibility); callers
+                # that care (attention) pick CP instead via policy.
+                out.append(None)
+                continue
+            used.update(parts)
+            out.append(parts if len(parts) > 1 else parts[0])
+        return P(*out)
+
+
+# Megatron-style LM defaults; per-arch configs override (see configs/).
+def lm_rules(*, fsdp: bool = True, context_parallel_seq: bool = False,
+             fsdp_axes: MeshAxes = ("pod", "data")) -> ShardingRules:
+    m: dict[str, MeshAxes] = {
+        # activations
+        "batch": ("pod", "data"),
+        "seq": None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        "cp_seq": "model" if context_parallel_seq else None,
+        "kv_seq": "model",    # decode caches: flash-decode partial softmax
+        "kv_hd": "model",     # decode caches: split-K alternative (§Perf)
+        # params
+        "embed": fsdp_axes if fsdp else None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "qkv_dim": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "lstm_inner": "model",
+        "layers": None,
+        "conv": None,
+    }
+    return ShardingRules(m)
+
+
+# ---------------------------------------------------------------------------
+# Context: active (mesh, rules); annotate() is a no-op outside it, so smoke
+# tests run the same model code without any mesh.
+# ---------------------------------------------------------------------------
+_CTX: contextvars.ContextVar[tuple[Mesh, ShardingRules] | None] = \
+    contextvars.ContextVar("sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: ShardingRules):
+    tok = _CTX.set((mesh, rules))
+    try:
+        with jax.set_mesh(mesh):
+            yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current() -> tuple[Mesh, ShardingRules] | None:
+    return _CTX.get()
+
+
+def annotate(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o mesh)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.resolve(axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def gather_weight(value: jax.Array, axes: Sequence[str | None]) -> jax.Array:
+    """ZeRO-3 just-in-time gather: constrain a weight to its sharding WITHOUT
+    the data axes, forcing GSPMD to all-gather the FSDP shards right before
+    use (wire = weight bytes once) instead of all-reducing activation
+    partial-sums (wire = activation bytes per matmul) — §Perf knob."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return value
+    mesh, rules = ctx
+    spec = rules.resolve(axes[-value.ndim:], value.shape, mesh)
+    stripped = []
+    for entry in spec:
+        parts = (entry,) if isinstance(entry, str) else (entry or ())
+        parts = tuple(p for p in parts if p not in ("data", "pod"))
+        stripped.append(parts[0] if len(parts) == 1 else (parts or None))
+    return jax.lax.with_sharding_constraint(
+        value, NamedSharding(mesh, P(*stripped)))
+
+
+def param_shardings(boxed: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """NamedSharding pytree for a boxed param tree (for jit in_shardings)."""
+    def one(p: Param):
+        shape = getattr(p.value, "shape", None)
+        return NamedSharding(mesh, rules.resolve(p.axes, shape, mesh))
+    return jax.tree_util.tree_map(one, boxed, is_leaf=is_param)
+
+
+def spec_tree(boxed: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    def one(p: Param):
+        shape = getattr(p.value, "shape", None)
+        return rules.resolve(p.axes, shape, mesh)
+    return jax.tree_util.tree_map(one, boxed, is_leaf=is_param)
+
+
+def shard_like(tree: Any, shardings: Any) -> Any:
+    """with_sharding_constraint a raw pytree with a sharding pytree."""
+    return jax.tree_util.tree_map(jax.lax.with_sharding_constraint, tree, shardings)

@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine, GenerateResult
+
+__all__ = ["Engine", "GenerateResult"]

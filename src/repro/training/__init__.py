@@ -1,0 +1,3 @@
+from repro.training.trainer import TrainConfig, TrainResult, build_train_step, train
+
+__all__ = ["TrainConfig", "TrainResult", "build_train_step", "train"]

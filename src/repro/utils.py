@@ -1,0 +1,102 @@
+"""Small shared utilities used across the framework."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import time
+from typing import Any, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+logger = logging.getLogger("repro")
+if not logger.handlers:
+    _h = logging.StreamHandler()
+    _h.setFormatter(logging.Formatter("[repro %(levelname)s %(asctime)s] %(message)s", "%H:%M:%S"))
+    logger.addHandler(_h)
+    logger.setLevel(os.environ.get("REPRO_LOGLEVEL", "INFO"))
+
+
+def block(tree: Any) -> Any:
+    """Block until every array in a pytree is ready; returns the tree."""
+    return jax.block_until_ready(tree)
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all arrays/ShapeDtypeStructs in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves)
+
+
+def tree_params(tree: Any) -> int:
+    """Total element count of all leaves in a pytree."""
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}EiB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("", "K", "M", "G", "T", "P", "E"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}FLOP"
+        n /= 1000.0
+    return f"{n:.2f}ZFLOP"
+
+
+class _JsonEncoder(json.JSONEncoder):
+    def default(self, o: Any) -> Any:  # noqa: D102
+        if dataclasses.is_dataclass(o) and not isinstance(o, type):
+            return dataclasses.asdict(o)
+        if isinstance(o, (np.integer,)):
+            return int(o)
+        if isinstance(o, (np.floating,)):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        return super().default(o)
+
+
+def dump_json(obj: Any, path: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=2, cls=_JsonEncoder)
+    os.replace(tmp, path)
+
+
+def load_json(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
+
+
+def timestamp() -> str:
+    return time.strftime("%Y-%m-%dT%H:%M:%S")
+
+
+def markdown_table(headers: Iterable[str], rows: Iterable[Iterable[Any]]) -> str:
+    headers = list(headers)
+    lines = ["| " + " | ".join(str(h) for h in headers) + " |",
+             "|" + "|".join("---" for _ in headers) + "|"]
+    for row in rows:
+        lines.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(lines)
+
+
+def flatten_dict(d: Mapping[str, Any], prefix: str = "") -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    for k, v in d.items():
+        key = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, Mapping):
+            out.update(flatten_dict(v, key))
+        else:
+            out[key] = v
+    return out

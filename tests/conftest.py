@@ -1,0 +1,13 @@
+import warnings
+
+import jax
+import pytest
+
+warnings.filterwarnings("ignore")
+# NOTE: no XLA_FLAGS here on purpose — smoke tests/benches must see 1 device.
+# Multi-device tests spawn subprocesses (tests/_subproc.py).
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

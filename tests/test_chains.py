@@ -1,0 +1,74 @@
+"""The op registry: coverage, stability, anti-optimization guarantees."""
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import chains
+
+
+REG = chains.default_registry()
+
+
+def _ctx(spec):
+    if spec.requires_x64 or spec.dtype in ("int64", "uint64", "float64"):
+        return jax.experimental.enable_x64()
+    return contextlib.nullcontext()
+
+
+def test_all_categories_covered():
+    cats = {o.category for o in REG}
+    assert cats == set(chains.CATEGORIES)
+
+
+def test_paper_table_ops_present():
+    names = {o.name for o in REG}
+    for required in ("add", "mul", "div.s.regular", "div.s.irregular",
+                     "div.s.runtime", "rem.s", "abs", "and", "xor", "shl",
+                     "cnot", "fma.float32", "div.runtime.float32",
+                     "add.float64", "add.bfloat16", "add.cc", "mul64hi",
+                     "rcp", "sqrt", "rsqrt", "sin", "cos", "lg2", "ex2",
+                     "copysign", "sad", "popc", "clz", "bfe", "bfi", "mul24"):
+        assert required in names, required
+
+
+@pytest.mark.parametrize("spec", REG, ids=lambda s: s.name)
+def test_chain_stable_at_512(spec):
+    """No NaN/Inf after a 512-op chain (the measurement length)."""
+    with _ctx(spec):
+        out = chains.chain_fn(spec, 512)(spec.carry(), *spec.operand_arrays())
+        if jnp.issubdtype(out.dtype, jnp.floating):
+            assert bool(jnp.isfinite(out)), spec.name
+
+
+@pytest.mark.parametrize("spec", [s for s in REG if s.dtype in
+                                  ("int32", "uint32") and s.guard <= 1],
+                         ids=lambda s: s.name)
+def test_chain_not_collapsed_by_xla(spec):
+    """The compiled 256-chain must keep >= 64 real ops (no reassociation
+    collapse) — this is the paper's dependent-dummy-op defence, verified on
+    the optimized HLO."""
+    with _ctx(spec):
+        args = (spec.carry(), *spec.operand_arrays())
+        txt = jax.jit(chains.chain_fn(spec, 256)).lower(*args).compile().as_text()
+    body_ops = sum(txt.count(f" {op}(") for op in
+                   ("add", "subtract", "multiply", "divide", "and", "or",
+                    "xor", "not", "shift-left", "shift-right-logical",
+                    "shift-right-arithmetic", "maximum", "minimum", "abs",
+                    "remainder", "compare", "popcnt", "count-leading-zeros",
+                    "select"))
+    assert body_ops >= 64, f"{spec.name}: chain collapsed to {body_ops} ops"
+
+
+def test_div_regular_strength_reduced():
+    """The compiler turns const-pow2 int division into shifts (paper's
+    'regular' divisor observation) but keeps runtime divisors as divides."""
+    reg = next(o for o in REG if o.name == "div.s.regular")
+    run = next(o for o in REG if o.name == "div.s.runtime")
+    t_reg = jax.jit(chains.chain_fn(reg, 64)).lower(
+        reg.carry(), *reg.operand_arrays()).compile().as_text()
+    t_run = jax.jit(chains.chain_fn(run, 64)).lower(
+        run.carry(), *run.operand_arrays()).compile().as_text()
+    assert t_run.count(" divide(") >= 32
+    assert t_reg.count(" divide(") == 0, "pow-2 divide not strength-reduced"

@@ -1,0 +1,71 @@
+"""LatencyDB: persistence, queries, report generation (property-based)."""
+import dataclasses
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_db import LatencyDB, LatencyRecord
+
+rec_st = st.builds(
+    LatencyRecord,
+    op=st.sampled_from(["add", "mul", "sqrt", "div.s.runtime"]),
+    category=st.sampled_from(["int_arith", "fp32"]),
+    dtype=st.sampled_from(["int32", "float32"]),
+    opt_level=st.sampled_from(["O0", "O1", "O3"]),
+    latency_ns=st.floats(min_value=0, max_value=1e6, allow_nan=False),
+    mad_ns=st.floats(min_value=0, max_value=1e3, allow_nan=False),
+    cycles=st.floats(min_value=0, max_value=1e6, allow_nan=False),
+    guard=st.integers(0, 3),
+    net_latency_ns=st.floats(min_value=0, max_value=1e6, allow_nan=False),
+    device_kind=st.just("cpu"), backend=st.just("cpu"),
+    jax_version=st.sampled_from(["0.8.2", "0.9.0"]),
+    n_samples=st.integers(1, 100),
+    measured_at=st.text(alphabet="0123456789T:-", max_size=20),
+    notes=st.just(""),
+)
+
+
+@given(st.lists(rec_st, max_size=30))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip(tmp_path_factory, recs):
+    db = LatencyDB()
+    db.extend(recs)
+    path = str(tmp_path_factory.mktemp("db") / "lat.json")
+    db.save(path)
+    db2 = LatencyDB(path)
+    assert len(db2) == len(db)
+    assert {r.key() for r in db2.records()} == {r.key() for r in db.records()}
+
+
+@given(st.lists(rec_st, min_size=1, max_size=30))
+@settings(max_examples=25, deadline=None)
+def test_query_filters(recs):
+    db = LatencyDB()
+    db.extend(recs)
+    for r in db.records():
+        got = db.query(op=r.op, opt_level=r.opt_level)
+        assert all(g.op == r.op and g.opt_level == r.opt_level for g in got)
+        assert any(g.key() == r.key() for g in got)
+
+
+def test_lookup_and_tables():
+    db = LatencyDB()
+    for lv, ns in (("O3", 5.0), ("O0", 5000.0)):
+        db.add(LatencyRecord(op="add", category="int_arith", dtype="int32",
+                             opt_level=lv, latency_ns=ns, mad_ns=0, cycles=ns,
+                             guard=1, net_latency_ns=ns / 2, device_kind="cpu",
+                             backend="cpu", jax_version="0.8.2", n_samples=10))
+    assert db.lookup_ns("add", "O3") == 5.0
+    md = db.table_markdown()
+    assert "add" in md and "Optimized" in md and "Non-Optimized" in md
+
+
+def test_version_diff_table():
+    db = LatencyDB()
+    for ver, ns in (("9.0", 100.0), ("10.0", 50.0)):
+        db.add(LatencyRecord(op="div.s.runtime", category="int_arith",
+                             dtype="int32", opt_level="O3", latency_ns=ns,
+                             mad_ns=0, cycles=ns, guard=1, net_latency_ns=ns,
+                             device_kind="cpu", backend="cpu", jax_version=ver,
+                             n_samples=10))
+    md = db.diff_markdown("9.0", "10.0")
+    assert "div.s.runtime" in md and "-50.0%" in md

@@ -1,0 +1,45 @@
+"""Memory-hierarchy probe: permutation properties + latency sanity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import membench
+from repro.core.timing import Timer
+
+
+@given(st.integers(min_value=2, max_value=2048), st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_ring_is_single_cycle(n, seed):
+    ring = membench._ring_permutation(n, seed)
+    seen = set()
+    p = 0
+    for _ in range(n):
+        assert p not in seen
+        seen.add(p)
+        p = int(ring[p])
+    assert p == 0 and len(seen) == n   # one full cycle through every slot
+
+
+def test_chase_latency_positive_and_grows():
+    t = Timer(warmup=1, reps=6)
+    small = membench.measure_latency(1 << 13, timer=t, steps=(512, 1536))
+    big = membench.measure_latency(1 << 23, timer=t, steps=(512, 1536))
+    assert small.latency_ns >= 0
+    assert big.latency_ns >= 0
+    # on a quiet machine the DRAM-resident chase is slower; on a noisy shared
+    # host we only require it not be absurdly faster
+    assert big.latency_ns >= 0.2 * small.latency_ns or big.latency_ns >= 1.0
+
+
+def test_detect_levels():
+    pts = [membench.MemPoint(1 << (12 + i), lat, lat, 64)
+           for i, lat in enumerate([1.0, 1.1, 1.0, 4.0, 4.2, 12.0])]
+    levels = membench.detect_levels(pts)
+    assert len(levels) == 3
+    assert levels[0]["hit_latency_ns"] < levels[-1]["hit_latency_ns"]
+
+
+def test_bandwidth_positive():
+    bw = membench.bandwidth_probe(size_bytes=1 << 22,
+                                  timer=Timer(warmup=1, reps=4))
+    assert bw > 0.01   # GB/s

@@ -1,0 +1,80 @@
+"""AdamW + int8 quantized state: math vs a reference implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.parallel.sharding import Param
+
+
+def _ref_adamw(p, g, m, v, t, cfg, lr):
+    gnorm = np.sqrt((g ** 2).sum())
+    g = g * min(1.0, cfg.grad_clip / max(gnorm, 1e-9))
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** t)
+    vh = v / (1 - cfg.b2 ** t)
+    wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+    return p - lr * (mh / (np.sqrt(vh) + cfg.eps) + wd * p), m, v
+
+
+def test_adamw_matches_reference():
+    cfg = optim.AdamWConfig(lr=1e-2)
+    rng = np.random.RandomState(0)
+    p_np = rng.randn(16, 32).astype(np.float32)
+    params = {"w": Param(jnp.asarray(p_np), ("a", "b"))}
+    state = optim.init_state(params, cfg)
+    m = v = np.zeros_like(p_np)
+    ref_p = p_np.copy()
+    for t in range(1, 4):
+        g_np = rng.randn(16, 32).astype(np.float32) * 0.1
+        grads = {"w": Param(jnp.asarray(g_np), ("a", "b"))}
+        params, state = optim.apply_update(params, grads, state, cfg)
+        ref_p, m, v = _ref_adamw(ref_p, g_np, m, v, t, cfg, cfg.lr)
+        np.testing.assert_allclose(params["w"].value, ref_p, atol=1e-5, rtol=1e-5)
+
+
+@given(st.integers(0, 10))
+@settings(max_examples=10, deadline=None)
+def test_quantize_roundtrip_bounded(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(8, 256).astype(np.float32))
+    qs = optim.quantize_i8(x)
+    back = optim.dequantize_i8(qs, x.shape)
+    # error bounded by scale/2 per block
+    scale = np.repeat(np.asarray(qs["scale"]), 128, axis=-1).reshape(x.shape)
+    assert np.all(np.abs(np.asarray(back - x)) <= scale * 0.51 + 1e-9)
+
+
+def test_quantize_1d_passthrough():
+    x = jnp.ones((64,))
+    assert not isinstance(optim.quantize_i8(x), dict)
+
+
+def test_int8_optimizer_tracks_f32():
+    cfg8 = optim.AdamWConfig(lr=1e-2, state_dtype="int8")
+    cfg32 = optim.AdamWConfig(lr=1e-2)
+    rng = np.random.RandomState(1)
+    p0 = rng.randn(32, 128).astype(np.float32)
+    pa = {"w": Param(jnp.asarray(p0), ("a", "b"))}
+    pb = {"w": Param(jnp.asarray(p0), ("a", "b"))}
+    sa = optim.init_state(pa, cfg8)
+    sb = optim.init_state(pb, cfg32)
+    for t in range(5):
+        g = jnp.asarray(rng.randn(32, 128).astype(np.float32) * 0.1)
+        pa, sa = optim.apply_update(pa, {"w": Param(g, ("a", "b"))}, sa, cfg8)
+        pb, sb = optim.apply_update(pb, {"w": Param(g, ("a", "b"))}, sb, cfg32)
+    diff = np.abs(np.asarray(pa["w"].value - pb["w"].value)).max()
+    scale = np.abs(np.asarray(pb["w"].value)).max()
+    assert diff < 0.05 * scale, f"int8 diverged: {diff} vs {scale}"
+
+
+def test_cosine_lr_shape():
+    import numpy as np
+    lrs = [float(optim.cosine_lr(jnp.asarray(s), warmup=10, total=100))
+           for s in range(0, 100, 10)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, abs=0.02)
+    assert lrs[-1] < lrs[2]

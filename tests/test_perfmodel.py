@@ -1,0 +1,52 @@
+"""Roofline model + HLO latency estimator."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import perfmodel
+from repro.core.latency_db import LatencyDB, LatencyRecord
+
+
+def _roof(flops, bts, hlo=""):
+    return perfmodel.Roofline().analyze(
+        arch="a", shape="s", mesh="m", chips=256,
+        cost={"flops": flops, "bytes accessed": bts}, hlo_text=hlo,
+        model_flops=flops * 256 * 0.5)
+
+
+def test_dominant_term():
+    r = _roof(197e12 * 0.01, 819e9 * 0.001)
+    assert r.dominant == "compute"
+    r = _roof(197e12 * 0.001, 819e9 * 0.01)
+    assert r.dominant == "memory"
+
+
+def test_terms_math():
+    r = _roof(flops=197e12, bts=819e9)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.useful_ratio == pytest.approx(0.5)
+    assert r.roofline_fraction == pytest.approx(0.5)
+
+
+def test_knee():
+    assert perfmodel.TPU_V5E.arithmetic_intensity_knee == pytest.approx(
+        197e12 / 819e9)
+
+
+def test_hlo_latency_estimator():
+    db = LatencyDB()
+    db.add(LatencyRecord(op="tanh", category="special_math", dtype="float32",
+                         opt_level="O3", latency_ns=20.0, mad_ns=0, cycles=20,
+                         guard=0, net_latency_ns=20, device_kind="cpu",
+                         backend="cpu", jax_version="x", n_samples=5))
+    txt = jax.jit(lambda x: jnp.tanh(x)).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile().as_text()
+    est = perfmodel.HloLatencyEstimator(db)
+    assert est.estimate_ns(txt) > 0
+
+
+def test_markdown_row_shape():
+    r = _roof(1e12, 1e10)
+    row = perfmodel.Roofline.markdown_row(r)
+    assert len(row) == len(perfmodel.Roofline.MD_HEADERS)

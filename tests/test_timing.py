@@ -1,0 +1,65 @@
+"""Unit + property tests for the paper's timing model (core/timing, measure)."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chains, measure
+from repro.core.timing import Measurement, Timer, _summarize
+
+
+def test_summarize_median_mad():
+    m = _summarize([10.0, 20.0, 30.0])
+    assert m.median_ns == 20.0
+    assert m.mad_ns == 10.0
+    assert m.min_ns == 10.0
+
+
+@given(st.lists(st.floats(min_value=0.0, max_value=1e9), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_summarize_properties(samples):
+    m = _summarize(samples)
+    assert min(samples) == m.min_ns
+    assert min(samples) <= m.median_ns <= max(samples)
+    assert m.mad_ns >= 0.0
+
+
+def test_measurement_subtraction():
+    a = Measurement(100.0, 2.0, 90.0, 10)
+    b = Measurement(40.0, 1.0, 35.0, 10)
+    d = a - b
+    assert d.median_ns == 60.0
+    assert d.min_ns == 55.0
+
+
+def test_slope_cancels_constant_overhead():
+    """Synthetic callables with known per-op cost + constant overhead."""
+    import time
+
+    def fn_by_len(n):
+        def fn():
+            t_end = time.perf_counter_ns() + 1000 * n + 50_000  # 1us/op + 50us fixed
+            while time.perf_counter_ns() < t_end:
+                pass
+        return fn
+
+    t = Timer(warmup=0, reps=3)
+    est = t.slope(fn_by_len, 8, 64)
+    assert 500 < est.median_ns < 2000, est  # ~1000 ns/op, overhead cancelled
+
+
+def test_clock_overhead_positive():
+    t = Timer(warmup=1, reps=5)
+    ov = measure.clock_overhead(t, opt_levels=("O3",))
+    assert ov["O3"] > 0
+
+
+def test_measure_op_returns_finite():
+    spec = next(o for o in chains.default_registry() if o.name == "fma.float32")
+    ns = measure.measure_op(spec, "O3", Timer(warmup=1, reps=8))
+    assert ns >= 0.0 and ns < 1e6
+
+
+def test_calibrated_clock_sane():
+    t = Timer()
+    hz = t.calibrate_clock_hz()
+    assert 1e8 <= hz <= 5e9
