@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chains, measure, membench, optlevels, perfmodel
-from repro.core.latency_db import LatencyDB
+from repro.api import Plan, Session
+from repro.core import chains, membench, optlevels, perfmodel
+from repro.core.optlevels import OPT_LEVELS
 from repro.core.timing import Timer
 from repro.utils import dump_json, load_json, markdown_table
 
@@ -34,7 +35,9 @@ def _emit(rows: list[tuple[str, float, str]]) -> None:
 
 # ------------------------------------------------------------------- Fig. 5
 def bench_clock_overhead(timer: Timer) -> list[tuple[str, float, str]]:
-    ov = measure.clock_overhead(timer)
+    # force=True: benches must re-measure, not report cached numbers.
+    result = Session(timer=timer).run(Plan.clock_overhead(OPT_LEVELS), force=True)
+    ov = {r.opt_level: r.latency_ns for r in result.records()}
     dump_json(ov, f"{RESULTS}/clock_overhead.json")
     return [(f"clock_overhead.{lv}", ns / 1e3,
              f"timing-region overhead at {lv} (paper Fig.5)")
@@ -43,14 +46,12 @@ def bench_clock_overhead(timer: Timer) -> list[tuple[str, float, str]]:
 
 # ----------------------------------------------------------------- Table II
 def bench_alu_latency(timer: Timer, quick: bool = False) -> list[tuple[str, float, str]]:
-    reg = chains.default_registry()
-    if quick:
-        keep = {"add", "mul", "div.s.runtime", "div.s.regular", "fma.float32",
-                "div.runtime.float32", "sqrt", "sin", "popc", "add.bfloat16"}
-        reg = tuple(o for o in reg if o.name in keep)
-    db = LatencyDB(f"{RESULTS}/latency_db.json")
-    measure.run_suite(reg, opt_levels=("O0", "O3"), db=db, timer=timer)
-    db.save()
+    keep = {"add", "mul", "div.s.runtime", "div.s.regular", "fma.float32",
+            "div.runtime.float32", "sqrt", "sin", "popc", "add.bfloat16"
+            } if quick else None
+    session = Session(db=f"{RESULTS}/latency_db.json", timer=timer)
+    session.run(Plan.instructions(ops=keep, opt_levels=("O0", "O3")), force=True)
+    db = session.db
     with open(f"{RESULTS}/table2_alu_latency.md", "w") as f:
         f.write(db.table_markdown())
     rows = []
@@ -68,10 +69,9 @@ def bench_optlevels(timer: Timer) -> list[tuple[str, float, str]]:
     """O1-vs-O3 deltas + the jax-version key for cross-version diffs."""
     keep = {"div.s.runtime", "div.s.irregular", "div.runtime.float32",
             "mul64hi", "popc", "sqrt"}
-    reg = tuple(o for o in chains.default_registry() if o.name in keep)
-    db = LatencyDB(f"{RESULTS}/latency_db.json")
-    measure.run_suite(reg, opt_levels=("O1", "O3"), db=db, timer=timer)
-    db.save()
+    session = Session(db=f"{RESULTS}/latency_db.json", timer=timer)
+    session.run(Plan.instructions(ops=keep, opt_levels=("O1", "O3")), force=True)
+    db = session.db
     rows = []
     for name in sorted(keep):
         o1 = db.lookup_ns(name, "O1")
@@ -90,7 +90,8 @@ def bench_optlevels(timer: Timer) -> list[tuple[str, float, str]]:
 def bench_memory_hierarchy(timer: Timer, quick: bool = False
                            ) -> list[tuple[str, float, str]]:
     sizes = [1 << k for k in (range(13, 24, 2) if quick else range(12, 26))]
-    pts = membench.sweep(sizes, timer=timer)
+    result = Session(timer=timer).run(Plan.memory(sizes), force=True)
+    pts = [membench.mempoint_from_record(r) for r in result.records()]
     levels = membench.detect_levels(pts)
     bw = membench.bandwidth_probe(timer=timer)
     dump_json({"points": [vars(p) for p in pts], "levels": levels,

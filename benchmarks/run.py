@@ -1,7 +1,10 @@
 """Benchmark orchestrator. One function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. ``--quick`` trims sweeps (used by CI);
-the default run measures the full registry.
+the default run measures the full registry. All characterization benches route
+through the ``repro.api`` Session/Plan pipeline (with ``force=True`` so perf
+tracking re-measures), i.e. the exact code path
+``python -m repro characterize`` users run.
 """
 from __future__ import annotations
 

@@ -1,49 +1,61 @@
-"""The paper's tool, end to end: characterize this machine's op latencies and
-memory hierarchy, persist the LatencyDB, and price a model's HLO with it
-(the PPT-GPU-style consumption the paper targets).
+"""The paper's tool, end to end, through the ``repro.api`` front door:
+characterize this machine's op latencies and memory hierarchy into a
+LatencyDB, then price a model's HLO with the measured table (the
+PPT-GPU-style consumption the paper targets).
 
-  PYTHONPATH=src python examples/characterize.py [--full]
+  PYTHONPATH=src python examples/characterize.py [--full] [--force]
+
+The session is cache-aware: re-running this script is free (every probe is a
+cache hit against the DB), an interrupted run resumes where it stopped, and
+``--force`` re-measures. The same pipeline is available as
+``python -m repro characterize --plan quick|table2|memory|full``.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import chains, measure, membench, perfmodel
-from repro.core.latency_db import LatencyDB
+from repro.api import Session, named_plan
+from repro.core import membench, perfmodel
 from repro.core.timing import Timer
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="full registry sweep")
+    ap.add_argument("--force", action="store_true", help="re-measure cache hits")
     ap.add_argument("--db", default="/tmp/latency_db.json")
     args = ap.parse_args()
-    timer = Timer(warmup=2, reps=20)
 
-    # 1. clock overhead (paper Fig. 5)
-    ov = measure.clock_overhead(timer)
+    # One Session owns the timer, the environment fingerprint, and the
+    # DB-backed cache; one Plan declares the whole sweep.
+    session = Session(db=args.db, timer=Timer(warmup=2, reps=20))
+    plan = named_plan("full") if args.full else named_plan("quick")
+    result = session.run(plan, force=args.force)
+    print(f"\nplan '{plan.name}': {result.summary()}")
+    for r in result.failed:
+        print(f"  FAILED {r.failure.op}@{r.failure.opt_level}: "
+              f"{r.failure.error_type}: {r.failure.message}")
+
+    # 1. clock overhead (paper Fig. 5) — measured by the plan's probes
+    db = session.db
+    ov = {lv: db.lookup_ns("clock_overhead", lv)
+          for lv in ("O0", "O3") if db.lookup_ns("clock_overhead", lv)}
     print("clock overhead (ns):", {k: round(v, 1) for k, v in ov.items()})
 
     # 2. instruction table (paper Table II)
-    reg = chains.default_registry()
-    if not args.full:
-        keep = {"add", "mul", "mad", "div.s.regular", "div.s.irregular",
-                "div.s.runtime", "fma.float32", "div.runtime.float32",
-                "sqrt", "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16"}
-        reg = tuple(o for o in reg if o.name in keep)
-    db = LatencyDB(args.db)
-    measure.run_suite(reg, opt_levels=("O0", "O3"), db=db, timer=timer)
-    db.save()
     print("\n== Table II analog ==")
-    print(db.table_markdown())
+    print(result.table_markdown())
 
-    # 3. memory hierarchy (paper Fig. 6)
-    pts = membench.sweep([1 << k for k in range(13, 24, 2)], timer=timer)
-    print("\n== Fig. 6 analog: hierarchy levels ==")
-    for lv in membench.detect_levels(pts):
-        print(f"  level {lv['level']}: hit {lv['hit_latency_ns']:.2f} ns, "
-              f"capacity >= {lv['capacity_bytes_lower_bound']} B")
+    # 3. memory hierarchy (paper Fig. 6) — rebuilt from the same DB
+    pts = [membench.mempoint_from_record(r) for r in db.records()
+           if r.category == "memory"]
+    if pts:
+        pts.sort(key=lambda p: p.working_set_bytes)
+        print("\n== Fig. 6 analog: hierarchy levels ==")
+        for lv in membench.detect_levels(pts):
+            print(f"  level {lv['level']}: hit {lv['hit_latency_ns']:.2f} ns, "
+                  f"capacity >= {lv['capacity_bytes_lower_bound']} B")
 
     # 4. feed a performance model (the paper's use case)
     def mlp(x, w1, w2):

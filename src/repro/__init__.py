@@ -1,4 +1,21 @@
 """repro: TPU-native instruction/memory latency characterization (the paper's
 technique) integrated as a first-class subsystem of a multi-pod JAX
-training/serving framework. See DESIGN.md."""
-__version__ = "1.0.0"
+training/serving framework. See DESIGN.md.
+
+The characterization front door is ``repro.api`` (``Session`` / ``Plan`` /
+``Probe`` / ``ResultSet``), also exposed lazily here::
+
+    from repro import Session, Plan
+
+CLI: ``python -m repro characterize --plan quick|table2|memory|full``.
+"""
+__version__ = "1.1.0"
+
+_API_EXPORTS = ("Session", "Plan", "Probe", "ResultSet", "named_plan")
+
+
+def __getattr__(name: str):
+    if name in _API_EXPORTS:  # lazy: keep `import repro` free of jax imports
+        import repro.api as api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,29 @@
+"""``repro.api`` — the single entry point for all characterization.
+
+The paper's tool is one pipeline: sweep every instruction and memory level,
+subtract the clock overhead, publish one table per device. This package is
+that pipeline as an API:
+
+* :class:`Probe` — one measurement with a stable cache identity
+  (instruction / memory / clock-overhead / Pallas-kernel implementations).
+* :class:`Plan` — a declarative, deduplicated cross-product of probes.
+* :class:`Session` — owns the Timer, environment fingerprint and
+  LatencyDB-backed cache; executes plans incrementally (cache hits skipped,
+  partial results flushed after every probe, errors recorded as structured
+  failures).
+* :class:`ResultSet` — per-probe outcomes plus report helpers.
+
+CLI: ``python -m repro characterize --plan quick|table2|memory|full``.
+The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
+``membench.sweep``) are deprecation shims over this package.
+"""
+from repro.api.plan import PLAN_NAMES, QUICK_OPS, Plan, named_plan
+from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
+                              KernelProbe, MemoryProbe, Probe, ProbeContext)
+from repro.api.session import ProbeResult, ResultSet, Session
+
+__all__ = [
+    "PLAN_NAMES", "QUICK_OPS", "Plan", "named_plan",
+    "ClockOverheadProbe", "InstructionProbe", "KernelProbe", "MemoryProbe",
+    "Probe", "ProbeContext", "ProbeResult", "ResultSet", "Session",
+]

@@ -1,0 +1,102 @@
+"""``python -m repro characterize`` — the full paper reproduction, one command.
+
+Examples::
+
+    python -m repro characterize --plan quick --db /tmp/db.json
+    python -m repro characterize --plan quick --db /tmp/db.json   # all cache hits
+    python -m repro characterize --plan full --db /tmp/db.json --force
+    python -m repro characterize --plan table2 --ops add,mul --table
+
+Scheduling is cache-aware by default: probes already in the DB for this
+(device, backend, jax version) are reported as cache hits and skipped, which
+is also what makes interrupted sweeps resumable — partial results are flushed
+after every probe, so re-running the same command picks up where it stopped.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Sequence
+
+from repro.api.plan import PLAN_NAMES, named_plan
+from repro.api.session import Session
+from repro.core.timing import Timer
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="Instruction/memory latency characterization (paper pipeline).")
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    ch = sub.add_parser("characterize",
+                        help="run a characterization plan into a LatencyDB")
+    ch.add_argument("--plan", choices=PLAN_NAMES, default="quick",
+                    help="named probe plan (default: quick)")
+    ch.add_argument("--db", default="/tmp/latency_db.json",
+                    help="LatencyDB JSON path (loaded if present; flushed "
+                         "after every probe)")
+    ch.add_argument("--force", action="store_true",
+                    help="re-measure probes already in the DB")
+    ch.add_argument("--resume", action="store_true",
+                    help="skip probes already in the DB (the default; flag "
+                         "kept for explicit scripts)")
+    ch.add_argument("--ops", default=None,
+                    help="comma-separated op filter applied to the plan "
+                         "(e.g. add,mul,clock_overhead)")
+    ch.add_argument("--opt-levels", default=None,
+                    help="comma-separated opt-level filter (e.g. O0,O3)")
+    ch.add_argument("--table", action="store_true",
+                    help="print the Table II analog after the run")
+    ch.add_argument("--warmup", type=int, default=2)
+    ch.add_argument("--reps", type=int, default=10,
+                    help="timed repetitions per measurement point")
+    ch.set_defaults(func=cmd_characterize)
+    return ap
+
+
+def cmd_characterize(args: argparse.Namespace) -> int:
+    if args.force and args.resume:
+        print("error: --force and --resume are mutually exclusive",
+              file=sys.stderr)
+        return 2
+    plan = named_plan(args.plan)
+    if args.ops:
+        plan = plan.filter(ops=[o.strip() for o in args.ops.split(",")])
+    if args.opt_levels:
+        plan = plan.filter(opt_levels=[l.strip() for l in args.opt_levels.split(",")])
+    if not len(plan):
+        print("error: plan is empty after filters", file=sys.stderr)
+        return 2
+
+    try:
+        session = Session(db=args.db,
+                          timer=Timer(warmup=args.warmup, reps=args.reps))
+    except Exception as e:  # unreadable/corrupt DB file: report, don't clobber
+        print(f"error: could not load DB {args.db}: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return 2
+    print(f"plan '{plan.name}': {len(plan)} probes -> {args.db} "
+          f"[{session.env['backend']}/{session.env['device_kind']}, "
+          f"jax {session.env['jax_version']}]")
+    result = session.run(plan, force=args.force)
+
+    print(f"plan '{plan.name}': {result.summary()}")
+    if result.cached and not result.measured and not result.failed:
+        print("all probes were cache hits; pass --force to re-measure")
+    for r in result.failed:
+        f = r.failure
+        print(f"  FAILED {f.op}@{f.opt_level}: {f.error_type}: {f.message}")
+    if args.table:
+        print()
+        print(result.table_markdown())
+    return 1 if result.failed else 0
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.func(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

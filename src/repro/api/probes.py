@@ -1,0 +1,199 @@
+"""Probe types: the unit of work a :class:`repro.api.Session` schedules.
+
+A probe is one measurement with a stable identity. The identity — the
+``(device_kind, backend, jax_version, opt_level, op, dtype)`` tuple — is
+exactly a :class:`LatencyRecord` key, which is what makes the session's result
+cache work: a probe whose key already exists in the DB is a cache hit and is
+never re-run (unless forced).
+
+Concrete probes wrap the existing measurement machinery:
+
+* :class:`InstructionProbe` — one :class:`OpSpec` at one opt level via the
+  dependent-chain slope method (paper Table II).
+* :class:`MemoryProbe` — the pointer-chase hierarchy probe at one working-set
+  size (paper Fig. 6).
+* :class:`ClockOverheadProbe` — the cost of the timed region itself at one
+  opt level (paper Fig. 5).
+* :class:`KernelProbe` — an in-kernel (Pallas) dependent ALU chain, the
+  device-side analog of the paper's timed PTX block.
+
+New probe types (energy counters, occupancy sweeps, ...) subclass
+:class:`Probe` and immediately gain caching, resumability and structured
+failure handling from the session scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping
+
+from repro.core import measure, membench
+from repro.core.chains import OpSpec
+from repro.core.latency_db import LatencyRecord
+from repro.core.timing import Measurement, Timer
+from repro.utils import timestamp
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeContext:
+    """Session-owned machinery handed to every probe run."""
+
+    timer: Timer
+    env: Mapping[str, str]              # device_kind / backend / jax_version
+    clock_hz: float
+    baseline_ns: Callable[[str], float]  # per-level 1-cycle-class baseline
+
+
+class Probe:
+    """One schedulable measurement. Subclasses set identity + implement run.
+
+    Attributes
+    ----------
+    op: table row name (e.g. ``"fma.float32"``, ``"mem.chase.ws8192"``).
+    opt_level: compilation level the probe measures under.
+    dtype: dtype axis of the record key.
+    category: table grouping (reuses the paper's categories; new probe kinds
+        add their own, e.g. ``"memory"``, ``"overhead"``, ``"kernel"``).
+    """
+
+    op: str = ""
+    opt_level: str = "O3"
+    dtype: str = "float32"
+    category: str = "uncategorized"
+
+    def logical_key(self) -> tuple[str, str, str]:
+        """Environment-independent identity, used for plan dedupe."""
+        return (self.op, self.opt_level, self.dtype)
+
+    def key(self, env: Mapping[str, str]) -> tuple:
+        """Full cache key; identical layout to ``LatencyRecord.key()``."""
+        return (env["device_kind"], env["backend"], env["jax_version"],
+                self.opt_level, self.op, self.dtype)
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ util
+    def _record(self, ctx: ProbeContext, m: Measurement, *, guard: int = 0,
+                notes: str = "") -> LatencyRecord:
+        """Build the result record from a Measurement, netting out guards."""
+        ns = max(m.median_ns, 0.0)
+        base = ctx.baseline_ns(self.opt_level) if guard else 0.0
+        return LatencyRecord(
+            op=self.op, category=self.category, dtype=self.dtype,
+            opt_level=self.opt_level, latency_ns=ns, mad_ns=m.mad_ns,
+            cycles=ns * ctx.clock_hz / 1e9, guard=guard,
+            net_latency_ns=max(ns - guard * base, 0.0), n_samples=m.n,
+            measured_at=timestamp(), notes=notes, **ctx.env)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.op}@{self.opt_level})"
+
+
+class InstructionProbe(Probe):
+    """One registry OpSpec at one opt level (paper Table II row x column)."""
+
+    def __init__(self, spec: OpSpec, opt_level: str = "O3"):
+        self.spec = spec
+        self.op = spec.name
+        self.opt_level = opt_level
+        self.dtype = spec.dtype
+        self.category = spec.category
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        m = measure.measure_op_full(self.spec, self.opt_level, ctx.timer)
+        return self._record(ctx, m, guard=self.spec.guard, notes=self.spec.notes)
+
+
+class ClockOverheadProbe(Probe):
+    """Cost of the timed region itself at one opt level (paper Fig. 5)."""
+
+    category = "overhead"
+
+    def __init__(self, opt_level: str = "O3"):
+        self.op = "clock_overhead"
+        self.opt_level = opt_level
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        import jax.numpy as jnp
+
+        from repro.core.optlevels import compile_at_level
+
+        x = jnp.asarray(1.0, jnp.float32)
+        fn = compile_at_level(lambda v: v, self.opt_level, x)
+        m = ctx.timer.time_callable(fn, x, reps=measure._REPS[self.opt_level])
+        return self._record(ctx, m, notes="null timed region (Fig. 5 analog)")
+
+
+class MemoryProbe(Probe):
+    """Dependent pointer chase at one working-set size (paper Fig. 6 point).
+
+    Non-default chase parameters are part of the op name (and therefore the
+    cache key): a low-fidelity short-chase point must never satisfy a cache
+    lookup for the standard-fidelity sweep.
+    """
+
+    category = "memory"
+    dtype = "int32"
+    DEFAULT_STEPS = (2048, 6144)
+
+    def __init__(self, working_set_bytes: int, line_bytes: int = 64,
+                 steps: tuple[int, int] = DEFAULT_STEPS):
+        self.working_set_bytes = int(working_set_bytes)
+        self.line_bytes = line_bytes
+        self.steps = tuple(steps)
+        self.op = f"mem.chase.ws{self.working_set_bytes}"
+        if self.steps != self.DEFAULT_STEPS:
+            self.op += f".s{self.steps[0]}-{self.steps[1]}"
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        pt = membench.measure_latency(self.working_set_bytes,
+                                      line_bytes=self.line_bytes,
+                                      timer=ctx.timer, steps=self.steps)
+        m = Measurement(median_ns=pt.latency_ns, mad_ns=0.0,
+                        min_ns=pt.latency_ns, n=ctx.timer.reps)
+        return self._record(
+            ctx, m, notes=f"cold_ns={pt.cold_latency_ns:.3f} "
+                          f"stride={pt.stride_bytes}")
+
+
+class KernelProbe(Probe):
+    """In-kernel (Pallas) dependent ALU chain, slope-timed.
+
+    The device-side analog of the paper's timed PTX block: the whole kernel is
+    the timed region and the two-length slope cancels DMA/launch overhead.
+    Runs in interpret mode on CPU; lowers to a real kernel on TPU.
+    """
+
+    category = "kernel"
+    DEFAULT_LENS = (8, 64)
+    DEFAULT_SHAPE = (8, 128)
+
+    def __init__(self, kernel_op: str = "fma",
+                 lens: tuple[int, int] = DEFAULT_LENS,
+                 shape: tuple[int, int] = DEFAULT_SHAPE, reps: int = 5):
+        self.kernel_op = kernel_op
+        self.lens = tuple(lens)
+        self.shape = tuple(shape)
+        self.reps = reps
+        # non-default chain lengths / tile are a different experiment: make
+        # them part of the cache identity, like MemoryProbe.steps
+        self.op = f"kernel.alu_chain.{kernel_op}"
+        if self.lens != self.DEFAULT_LENS:
+            self.op += f".l{self.lens[0]}-{self.lens[1]}"
+        if self.shape != self.DEFAULT_SHAPE:
+            self.op += f".t{self.shape[0]}x{self.shape[1]}"
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        import jax.numpy as jnp
+
+        from repro.kernels.ops import alu_chain
+
+        x = jnp.full(self.shape, 1.0, jnp.float32)
+        a = jnp.full(self.shape, 0.5, jnp.float32)
+
+        def fn_by_len(n: int):
+            return lambda x, a: alu_chain(x, a, n=n, op=self.kernel_op)
+
+        m = ctx.timer.slope(fn_by_len, *self.lens, x, a, reps=self.reps)
+        return self._record(
+            ctx, m, notes=f"pallas alu_chain tile={self.shape} lens={self.lens}")

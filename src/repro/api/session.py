@@ -1,0 +1,174 @@
+"""The session: single front door for all characterization runs.
+
+A :class:`Session` owns the pieces every sweep needs exactly once — the
+:class:`Timer`, the environment fingerprint, the calibrated clock, the
+per-level guard baseline, and a :class:`LatencyDB`-backed result cache — and
+executes :class:`Plan`\\ s **incrementally**:
+
+* probes whose cache key already exists in the DB are skipped (``force=True``
+  re-measures);
+* the DB is flushed to disk after *every* probe, so an interrupted sweep
+  resumes for free: re-run the same plan and completed probes are cache hits;
+* a probe that raises is recorded as a structured :class:`ProbeFailure` in
+  the DB (and superseded when a later run of the same probe succeeds) instead
+  of vanishing into a log line. ``KeyboardInterrupt`` is *not* swallowed —
+  partial results are already on disk.
+
+Typical use::
+
+    from repro.api import Plan, Session
+
+    session = Session(db="/tmp/latency_db.json")
+    result = session.run(Plan.instructions(opt_levels=("O0", "O3"))
+                         + Plan.memory())
+    print(result.summary())
+    print(result.table_markdown())
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import chains, measure
+from repro.core.latency_db import (LatencyDB, LatencyRecord, ProbeFailure,
+                                   current_environment)
+from repro.core.timing import Timer
+from repro.utils import logger, timestamp
+
+from repro.api.plan import Plan
+from repro.api.probes import Probe, ProbeContext
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeResult:
+    """Outcome of one scheduled probe."""
+
+    probe: Probe
+    status: str                        # "measured" | "cached" | "failed"
+    record: LatencyRecord | None = None
+    failure: ProbeFailure | None = None
+
+
+@dataclasses.dataclass
+class ResultSet:
+    """Per-probe outcomes of one ``Session.run``, in plan order."""
+
+    results: list[ProbeResult]
+    db: LatencyDB
+
+    @property
+    def measured(self) -> list[ProbeResult]:
+        return [r for r in self.results if r.status == "measured"]
+
+    @property
+    def cached(self) -> list[ProbeResult]:
+        return [r for r in self.results if r.status == "cached"]
+
+    @property
+    def failed(self) -> list[ProbeResult]:
+        return [r for r in self.results if r.status == "failed"]
+
+    def records(self) -> list[LatencyRecord]:
+        return [r.record for r in self.results if r.record is not None]
+
+    def summary(self) -> str:
+        return (f"{len(self.measured)} measured, {len(self.cached)} cached, "
+                f"{len(self.failed)} failed ({len(self.results)} probes)")
+
+    def table_markdown(self, opt_levels: tuple[str, ...] = ("O3", "O0")) -> str:
+        return self.db.table_markdown(opt_levels=opt_levels)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+
+class Session:
+    """Cache-aware scheduler over a LatencyDB (see module docstring).
+
+    Parameters
+    ----------
+    db: a :class:`LatencyDB`, a path to one (loaded if present, created on
+        first flush), or None for an in-memory DB.
+    timer: shared :class:`Timer`; defaults to the standard calibration.
+    force: re-measure cache hits by default (per-run ``force`` overrides).
+    """
+
+    def __init__(self, db: LatencyDB | str | None = None,
+                 timer: Timer | None = None, force: bool = False):
+        self.db = db if isinstance(db, LatencyDB) else LatencyDB(path=db)
+        self.timer = timer or Timer()
+        self.force = force
+        self.env = current_environment()
+        self._baseline: dict[tuple[str, bool], float] = {}
+
+    # ------------------------------------------------------------- baseline
+    def baseline_ns(self, opt_level: str, use_db: bool = True) -> float:
+        """Per-level 1-cycle-class baseline used to net out guard ops.
+
+        The ``add`` spec is an (add ^ xor) pair in the same latency class, so
+        baseline = measured_pair / (1 + guard). Derived from the DB when the
+        pair is already cached (and ``use_db``); measured (and cached
+        in-session) otherwise. Forced runs pass ``use_db=False`` so a stale
+        cached baseline is never mixed into fresh measurements.
+        """
+        cache_key = (opt_level, use_db)
+        if cache_key not in self._baseline:
+            base = next((o for o in chains.default_registry()
+                         if o.name == "add"), None)
+            if base is None:
+                self._baseline[cache_key] = 0.0
+            else:
+                rec = self.db.get((self.env["device_kind"], self.env["backend"],
+                                   self.env["jax_version"], opt_level,
+                                   base.name, base.dtype)) if use_db else None
+                ns = rec.latency_ns if rec is not None else measure.measure_op(
+                    base, opt_level, self.timer)
+                self._baseline[cache_key] = ns / (1 + base.guard)
+        return self._baseline[cache_key]
+
+    def _context(self, force: bool = False) -> ProbeContext:
+        return ProbeContext(timer=self.timer, env=self.env,
+                            clock_hz=self.timer.calibrate_clock_hz(),
+                            baseline_ns=lambda lv: self.baseline_ns(
+                                lv, use_db=not force))
+
+    # ------------------------------------------------------------ execution
+    def run(self, plan: Plan, force: bool | None = None) -> ResultSet:
+        """Execute a plan incrementally; returns per-probe outcomes.
+
+        Probes run sequentially (timing probes must not contend with each
+        other). After every measured/failed probe the DB is flushed to its
+        path, so interrupting a sweep loses at most the in-flight probe.
+        """
+        force = self.force if force is None else force
+        plan = plan.dedupe()
+        ctx = self._context(force=force)
+        results: list[ProbeResult] = []
+        for probe in plan:
+            key = probe.key(self.env)
+            if not force and key in self.db:
+                results.append(ProbeResult(probe, "cached", record=self.db.get(key)))
+                logger.debug("cached   %-28s", probe.op + "@" + probe.opt_level)
+                continue
+            try:
+                rec = probe.run(ctx)
+            except Exception as e:  # noqa: BLE001 - recorded as structured failure
+                failure = ProbeFailure(
+                    op=probe.op, dtype=probe.dtype, opt_level=probe.opt_level,
+                    error_type=type(e).__name__, message=str(e),
+                    failed_at=timestamp(), **self.env)
+                self.db.add_failure(failure)
+                results.append(ProbeResult(probe, "failed", failure=failure))
+                logger.warning("probe %s@%s failed: %s: %s", probe.op,
+                               probe.opt_level, type(e).__name__, e)
+            else:
+                self.db.add(rec)
+                results.append(ProbeResult(probe, "measured", record=rec))
+                logger.info("measured %-28s %8.1fns (±%.1f)",
+                            f"{probe.op}@{probe.opt_level}", rec.latency_ns,
+                            rec.mad_ns)
+            self._flush()
+        return ResultSet(results=results, db=self.db)
+
+    def _flush(self) -> None:
+        if self.db.path:
+            self.db.save()

@@ -38,6 +38,29 @@ class LatencyRecord:
                 self.opt_level, self.op, self.dtype)
 
 
+@dataclasses.dataclass(frozen=True)
+class ProbeFailure:
+    """Structured record of a probe that raised instead of measuring.
+
+    Keyed identically to :class:`LatencyRecord` so a later successful
+    measurement of the same probe supersedes the failure.
+    """
+
+    op: str
+    dtype: str
+    opt_level: str
+    device_kind: str
+    backend: str
+    jax_version: str
+    error_type: str
+    message: str
+    failed_at: str = ""
+
+    def key(self) -> tuple:
+        return (self.device_kind, self.backend, self.jax_version,
+                self.opt_level, self.op, self.dtype)
+
+
 def current_environment() -> dict[str, str]:
     dev = jax.devices()[0]
     return {
@@ -51,12 +74,14 @@ class LatencyDB:
     def __init__(self, path: str | None = None):
         self.path = path
         self._records: dict[tuple, LatencyRecord] = {}
+        self._failures: dict[tuple, ProbeFailure] = {}
         if path and os.path.exists(path):
             self.load(path)
 
     # ----------------------------------------------------------------- CRUD
     def add(self, rec: LatencyRecord) -> None:
         self._records[rec.key()] = rec
+        self._failures.pop(rec.key(), None)  # a success supersedes a failure
 
     def extend(self, recs: Iterable[LatencyRecord]) -> None:
         for r in recs:
@@ -65,8 +90,21 @@ class LatencyDB:
     def records(self) -> list[LatencyRecord]:
         return list(self._records.values())
 
+    def get(self, key: tuple) -> LatencyRecord | None:
+        return self._records.get(tuple(key))
+
+    def __contains__(self, key: tuple) -> bool:
+        return tuple(key) in self._records
+
     def __len__(self) -> int:
         return len(self._records)
+
+    # ------------------------------------------------------------- failures
+    def add_failure(self, failure: ProbeFailure) -> None:
+        self._failures[failure.key()] = failure
+
+    def failures(self) -> list[ProbeFailure]:
+        return list(self._failures.values())
 
     def query(self, **filters: str) -> list[LatencyRecord]:
         out = []
@@ -87,13 +125,17 @@ class LatencyDB:
         path = path or self.path
         assert path, "no path for LatencyDB.save"
         dump_json({"saved_at": timestamp(),
-                   "records": [dataclasses.asdict(r) for r in self._records.values()]}, path)
+                   "records": [dataclasses.asdict(r) for r in self._records.values()],
+                   "failures": [dataclasses.asdict(f) for f in self._failures.values()]},
+                  path)
         return path
 
     def load(self, path: str) -> None:
         blob = load_json(path)
         for raw in blob["records"]:
             self.add(LatencyRecord(**raw))
+        for raw in blob.get("failures", ()):  # absent in pre-1.1 DB files
+            self.add_failure(ProbeFailure(**raw))
 
     # -------------------------------------------------------------- reports
     def table_markdown(self, opt_levels: tuple[str, ...] = ("O3", "O0")) -> str:
@@ -106,7 +148,11 @@ class LatencyDB:
             row = [cat, op, dt]
             for lv in opt_levels:
                 rec = levels.get(lv)
-                row.append(f"{rec.latency_ns:.1f}ns ({rec.cycles:.0f}cy)" if rec else "—")
+                if rec is None:
+                    row.append("—")
+                else:
+                    disp = f"±{rec.mad_ns:.1f}" if rec.mad_ns else ""
+                    row.append(f"{rec.latency_ns:.1f}{disp}ns ({rec.cycles:.0f}cy)")
             rows.append(row)
         headers = ["category", "op", "dtype"] + [
             {"O3": "Optimized", "O0": "Non-Optimized"}.get(lv, lv) for lv in opt_levels]

@@ -1,22 +1,24 @@
-"""Suite runner: sweep the op registry across opt levels into a LatencyDB.
+"""Per-op measurement (Section IV) + deprecation shims for the old suite API.
 
-This is the main entry point of the paper's tool (Section IV): for every
-instruction in the registry, build the dependent chain, compile it at each
-optimization level, and extract the per-op latency with the slope method.
+``measure_op`` / ``measure_op_full`` extract one instruction's latency with
+the two-length slope method and remain the measurement core. The old suite
+entry points (``run_suite``, ``clock_overhead``) are thin shims over
+:mod:`repro.api` — new code should build a :class:`repro.api.Plan` and run it
+through a :class:`repro.api.Session`, which adds caching, resumability and
+structured failure records.
 """
 from __future__ import annotations
 
 import contextlib
+import warnings
 from typing import Callable, Sequence
 
 import jax
 
-from repro.core import chains
 from repro.core.chains import OpSpec, chain_fn
-from repro.core.latency_db import LatencyDB, LatencyRecord, current_environment
+from repro.core.latency_db import LatencyDB
 from repro.core.optlevels import OPT_LEVELS, compile_at_level
-from repro.core.timing import Timer
-from repro.utils import logger, timestamp
+from repro.core.timing import Measurement, Timer
 
 # Chain lengths per opt level: eager dispatch is ~1e4x slower per op, so O0
 # uses short chains (the paper's -O0 numbers are likewise dominated by
@@ -36,8 +38,14 @@ def _x64_ctx(spec: OpSpec):
     return contextlib.nullcontext()
 
 
-def measure_op(spec: OpSpec, opt_level: str = "O3", timer: Timer | None = None) -> float:
-    """Median per-op latency in ns at the given optimization level."""
+def measure_op_full(spec: OpSpec, opt_level: str = "O3",
+                    timer: Timer | None = None) -> Measurement:
+    """Per-op latency at the given optimization level, with dispersion.
+
+    Returns the full :class:`Measurement` (median + MAD + min) so callers can
+    propagate the dispersion into :class:`LatencyRecord.mad_ns` instead of
+    dropping it.
+    """
     timer = timer or Timer()
     n1, n2 = _CHAIN_LENS[opt_level]
     if spec.max_chain is not None:
@@ -50,8 +58,12 @@ def measure_op(spec: OpSpec, opt_level: str = "O3", timer: Timer | None = None) 
         def fn_by_len(n: int) -> Callable:
             return compile_at_level(chain_fn(spec, n), opt_level, carry, *operands)
 
-        m = timer.slope(fn_by_len, n1, n2, carry, *operands, reps=reps)
-    return max(m.median_ns, 0.0)
+        return timer.slope(fn_by_len, n1, n2, carry, *operands, reps=reps)
+
+
+def measure_op(spec: OpSpec, opt_level: str = "O3", timer: Timer | None = None) -> float:
+    """Median per-op latency in ns at the given optimization level."""
+    return max(measure_op_full(spec, opt_level, timer).median_ns, 0.0)
 
 
 def run_suite(registry: Sequence[OpSpec] | None = None,
@@ -59,49 +71,40 @@ def run_suite(registry: Sequence[OpSpec] | None = None,
               db: LatencyDB | None = None,
               timer: Timer | None = None,
               categories: Sequence[str] | None = None) -> LatencyDB:
-    """Measure every op at every level; returns/extends the LatencyDB."""
-    registry = list(registry if registry is not None else chains.default_registry())
-    if categories:
-        registry = [o for o in registry if o.category in categories]
-    db = db or LatencyDB()
-    timer = timer or Timer()
-    env = current_environment()
-    clock = timer.calibrate_clock_hz()
+    """Deprecated shim: measure every op at every level into the LatencyDB.
 
-    # Per-level 1-cycle-class baseline, used to net out guard ops. The add
-    # spec is itself an (add ^ xor) pair (collapse-proof), and both halves are
-    # in the same latency class, so baseline = measured_pair / 2.
-    base = next((o for o in chains.default_registry() if o.name == "add"), None)
-    add_ns = {lv: (measure_op(base, lv, timer) / (1 + base.guard) if base else 0.0)
-              for lv in opt_levels}
+    Use ``Session(db=...).run(Plan.instructions(...))`` instead — same
+    measurements plus caching, resume and structured failures. This shim
+    keeps the old always-re-measure semantics (``force=True``).
+    """
+    warnings.warn(
+        "measure.run_suite is deprecated; use "
+        "repro.api.Session.run(Plan.instructions(...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import Plan, Session
 
-    for spec in registry:
-        for lv in opt_levels:
-            try:
-                ns = measure_op(spec, lv, timer)
-            except Exception as e:  # noqa: BLE001 - record and continue the sweep
-                logger.warning("measure %s@%s failed: %s", spec.name, lv, e)
-                continue
-            net = max(ns - spec.guard * add_ns.get(lv, 0.0), 0.0)
-            db.add(LatencyRecord(
-                op=spec.name, category=spec.category, dtype=spec.dtype, opt_level=lv,
-                latency_ns=ns, mad_ns=0.0, cycles=ns * clock / 1e9, guard=spec.guard,
-                net_latency_ns=net, n_samples=_REPS[lv], measured_at=timestamp(),
-                notes=spec.notes, **env))
-        logger.info("measured %-22s %s", spec.name,
-                    " ".join(f"{lv}={db.lookup_ns(spec.name, lv, float('nan'), dtype=spec.dtype):8.1f}ns"
-                             for lv in opt_levels))
-    return db
+    session = Session(db=db, timer=timer)
+    session.run(Plan.instructions(registry=registry, opt_levels=opt_levels,
+                                  categories=categories), force=True)
+    return session.db
 
 
 def clock_overhead(timer: Timer | None = None, opt_levels: Sequence[str] = OPT_LEVELS
                    ) -> dict[str, float]:
-    """Fig. 5 analog: the cost of the measurement region itself, per level."""
-    timer = timer or Timer()
-    import jax.numpy as jnp
-    x = jnp.asarray(1.0, jnp.float32)
-    out = {}
-    for lv in opt_levels:
-        fn = compile_at_level(lambda v: v, lv, x)
-        out[lv] = timer.time_callable(fn, x, reps=_REPS[lv]).median_ns
-    return out
+    """Deprecated shim (Fig. 5 analog): timed-region cost per opt level.
+
+    Use ``Session().run(Plan.clock_overhead(...))`` instead.
+    """
+    warnings.warn(
+        "measure.clock_overhead is deprecated; use "
+        "repro.api.Session.run(Plan.clock_overhead(...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import Plan, Session
+
+    result = Session(timer=timer).run(Plan.clock_overhead(opt_levels), force=True)
+    if result.failed:  # the old implementation raised; stay loud for callers
+        f = result.failed[0].failure
+        raise RuntimeError(
+            f"clock_overhead@{f.opt_level} failed: {f.error_type}: {f.message}")
+    return {r.record.opt_level: r.record.latency_ns for r in result.results
+            if r.record is not None}

@@ -94,17 +94,41 @@ def measure_latency(working_set_bytes: int, line_bytes: int = 64,
                     cold_latency_ns=cold_ns, stride_bytes=line_bytes)
 
 
+def mempoint_from_record(rec) -> MemPoint:
+    """Rebuild a MemPoint from its LatencyDB record (see api.MemoryProbe).
+
+    The probe encodes the working set in the op name (``mem.chase.ws<N>``)
+    and the cold/stride figures in the notes field.
+    """
+    fields = dict(kv.split("=", 1) for kv in rec.notes.split() if "=" in kv)
+    return MemPoint(working_set_bytes=int(rec.op.rsplit("ws", 1)[1].split(".")[0]),
+                    latency_ns=rec.latency_ns,
+                    cold_latency_ns=float(fields.get("cold_ns", 0.0)),
+                    stride_bytes=int(fields.get("stride", 64)))
+
+
 def sweep(working_sets: Sequence[int] | None = None, timer: Timer | None = None
           ) -> list[MemPoint]:
-    """Fig. 6 analog: latency vs working-set size across the hierarchy."""
-    if working_sets is None:
-        working_sets = [1 << k for k in range(12, 26)]  # 4 KiB .. 32 MiB
-    pts = []
-    for ws in working_sets:
-        pt = measure_latency(ws, timer=timer)
-        logger.info("chase ws=%-10d hit=%6.2fns cold=%6.2fns", ws, pt.latency_ns,
-                    pt.cold_latency_ns)
-        pts.append(pt)
+    """Deprecated shim (Fig. 6 analog): latency vs working-set size.
+
+    Use ``Session().run(Plan.memory(...))`` instead — same probe with
+    caching and resumability.
+    """
+    import warnings
+
+    warnings.warn(
+        "membench.sweep is deprecated; use "
+        "repro.api.Session.run(Plan.memory(...))",
+        DeprecationWarning, stacklevel=2)
+    from repro.api import Plan, Session
+
+    session = Session(timer=timer or Timer(warmup=2, reps=15))
+    result = session.run(Plan.memory(working_sets), force=True)
+    pts = [mempoint_from_record(r.record) for r in result.results
+           if r.record is not None]
+    for pt in pts:
+        logger.info("chase ws=%-10d hit=%6.2fns cold=%6.2fns",
+                    pt.working_set_bytes, pt.latency_ns, pt.cold_latency_ns)
     return pts
 
 

@@ -1,4 +1,5 @@
-from repro.launch.mesh import (data_shards, make_mesh_for,
+from repro.launch.mesh import (data_shards, make_mesh, make_mesh_for,
                                make_production_mesh, total_chips)
 
-__all__ = ["data_shards", "make_mesh_for", "make_production_mesh", "total_chips"]
+__all__ = ["data_shards", "make_mesh", "make_mesh_for", "make_production_mesh",
+           "total_chips"]

@@ -29,7 +29,7 @@ from repro.core import hlo_analysis, perfmodel
 from repro.launch import cells
 from repro.launch.mesh import make_production_mesh, total_chips
 from repro.parallel import sharding as shd
-from repro.utils import dump_json, human_bytes, load_json, logger
+from repro.utils import compiled_cost, dump_json, human_bytes, load_json, logger
 
 RESULTS_DIR = "benchmarks/results/dryrun"
 
@@ -73,7 +73,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, *, microbatch=None,
           f"temp={human_bytes(ma.temp_size_in_bytes)} "
           f"peak={human_bytes(ma.peak_memory_in_bytes)} "
           f"alias={human_bytes(ma.alias_size_in_bytes)}")
-    cost = compiled.cost_analysis()
+    cost = compiled_cost(compiled)
     print(f"   cost_analysis: flops={cost.get('flops', 0):.3e} "
           f"bytes={cost.get('bytes accessed', 0):.3e}")
 

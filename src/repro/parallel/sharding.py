@@ -147,11 +147,25 @@ _CTX: contextvars.ContextVar[tuple[Mesh, ShardingRules] | None] = \
     contextvars.ContextVar("sharding_ctx", default=None)
 
 
+def _mesh_ctx(mesh: Mesh):
+    """Enter the mesh with whatever this jax version provides.
+
+    jax >= 0.5 has jax.set_mesh; some 0.4.x ship jax.sharding.use_mesh; on
+    older jax the explicit NamedSharding(mesh, ...) paths below don't need a
+    global mesh at all, so fall back to a no-op.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return contextlib.nullcontext()
+
+
 @contextlib.contextmanager
 def use_sharding(mesh: Mesh, rules: ShardingRules):
     tok = _CTX.set((mesh, rules))
     try:
-        with jax.set_mesh(mesh):
+        with _mesh_ctx(mesh):
             yield
     finally:
         _CTX.reset(tok)

@@ -25,6 +25,18 @@ def block(tree: Any) -> Any:
     return jax.block_until_ready(tree)
 
 
+def compiled_cost(compiled: Any) -> dict[str, Any]:
+    """``compiled.cost_analysis()`` normalized to a dict.
+
+    jax < 0.5 returns a one-element list of dicts (one per computation);
+    newer jax returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def tree_bytes(tree: Any) -> int:
     """Total bytes of all arrays/ShapeDtypeStructs in a pytree."""
     leaves = jax.tree_util.tree_leaves(tree)

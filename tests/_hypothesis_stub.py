@@ -1,0 +1,215 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is unavailable.
+
+The test suite's property tests only use a small surface — ``@given`` over a
+handful of strategies, plus ``@settings(max_examples=..., deadline=None)``.
+This container image does not ship ``hypothesis`` and nothing may be
+installed, so ``conftest.py`` registers this module under the ``hypothesis``
+name when the real one cannot be imported. When hypothesis *is* installed it
+wins and this file is inert.
+
+The stub is deliberately dumb: deterministic seeded-random example generation,
+no shrinking, no database. That is enough to exercise the properties.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rng: random.Random) -> Any:
+            for _ in range(1000):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate too strict for stub strategy")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int | None = None, max_value: int | None = None) -> SearchStrategy:
+    lo = -(2 ** 31) if min_value is None else int(min_value)
+    hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+    def draw(rng: random.Random) -> int:
+        r = rng.random()
+        if r < 0.1:
+            return lo
+        if r < 0.2:
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float | None = None, max_value: float | None = None,
+           allow_nan: bool = True, allow_infinity: bool | None = None,
+           width: int = 64) -> SearchStrategy:
+    lo = -1e300 if min_value is None else float(min_value)
+    hi = 1e300 if max_value is None else float(max_value)
+
+    def draw(rng: random.Random) -> float:
+        r = rng.random()
+        if r < 0.1:
+            return lo
+        if r < 0.2:
+            return hi
+        if r < 0.3 and lo <= 0.0 <= hi:
+            return 0.0
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def none() -> SearchStrategy:
+    return just(None)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+
+    def draw(rng: random.Random) -> Any:
+        return elements[rng.randrange(len(elements))]
+
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int | None = None, unique: bool = False) -> SearchStrategy:
+    cap = min_size + 10 if max_size is None else max_size
+
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, cap)
+        out: list = []
+        tries = 0
+        while len(out) < n and tries < 100 * (n + 1):
+            v = elements.example(rng)
+            tries += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+    return SearchStrategy(draw)
+
+
+def text(alphabet: str = "abcdefghijklmnopqrstuvwxyz", min_size: int = 0,
+         max_size: int | None = None) -> SearchStrategy:
+    chars = sampled_from(list(alphabet) or ["a"])
+    return lists(chars, min_size=min_size, max_size=10 if max_size is None else max_size
+                 ).map("".join)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def builds(target: Callable[..., Any], *args: SearchStrategy,
+           **kwargs: SearchStrategy) -> SearchStrategy:
+    def draw(rng: random.Random) -> Any:
+        return target(*(s.example(rng) for s in args),
+                      **{k: s.example(rng) for k, s in kwargs.items()})
+
+    return SearchStrategy(draw)
+
+
+class settings:
+    """Decorator collecting the (few) settings the stub honours."""
+
+    def __init__(self, max_examples: int = 100, deadline: Any = None, **_ignored: Any):
+        self.max_examples = int(max_examples)
+        self.deadline = deadline
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._stub_settings = self  # read at call time by the @given wrapper
+        return fn
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+def given(*strategies: SearchStrategy, **kw_strategies: SearchStrategy) -> Callable:
+    """Run the test over deterministically-seeded random examples.
+
+    Like hypothesis, positional strategies bind to the *rightmost* parameters
+    of the test function; any leading parameters are pytest fixtures, and the
+    wrapper's signature is trimmed so pytest only supplies those.
+    """
+
+    def decorate(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        drawn = dict(kw_strategies)
+        positional = params[len(params) - len(strategies):] if strategies else []
+        drawn.update(zip(positional, strategies))
+        fixture_names = [p for p in params if p not in drawn]
+
+        @functools.wraps(fn)
+        def wrapper(**fixture_kwargs: Any) -> None:
+            cfg = getattr(wrapper, "_stub_settings", None) or settings(max_examples=25)
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(max(cfg.max_examples, 1)):
+                example = {name: strat.example(rng) for name, strat in drawn.items()}
+                try:
+                    fn(**fixture_kwargs, **example)
+                except _Assumption:
+                    continue
+
+        wrapper.__signature__ = inspect.Signature(  # type: ignore[attr-defined]
+            [sig.parameters[name] for name in fixture_names])
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("SearchStrategy", "integers", "floats", "booleans", "just",
+                 "none", "sampled_from", "lists", "text", "tuples", "builds"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.__version__ = "0.0.0+repro-stub"
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,7 +1,35 @@
 import warnings
 
+try:  # this image has no hypothesis and installs are forbidden; gate on a stub
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+
 import jax
 import pytest
+
+if not hasattr(jax.sharding, "AxisType"):
+    # jax < 0.5 compat: tests pass axis_types=(AxisType.Auto, ...) which this
+    # jaxlib predates; Auto was the implicit (only) behavior, so dropping the
+    # kwarg preserves semantics.
+    import enum
+    import functools
+
+    class _AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = _AxisType
+    _orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(_orig_make_mesh)
+    def _make_mesh(*args, axis_types=None, **kwargs):
+        return _orig_make_mesh(*args, **kwargs)
+
+    jax.make_mesh = _make_mesh
 
 warnings.filterwarnings("ignore")
 # NOTE: no XLA_FLAGS here on purpose — smoke tests/benches must see 1 device.

@@ -1,0 +1,202 @@
+"""repro.api: plan dedupe, cache-hit skip, resume, structured failures, MAD."""
+import pytest
+
+from repro.api import Plan, Probe, Session
+from repro.api.probes import InstructionProbe
+from repro.core import chains, measure
+from repro.core.latency_db import LatencyDB
+from repro.core.timing import Measurement, Timer
+
+
+class CountingProbe(Probe):
+    """Deterministic fake probe: counts runs, optionally raises."""
+
+    category = "test"
+
+    def __init__(self, op, error=None, runs=None):
+        self.op = op
+        self.opt_level = "O3"
+        self.dtype = "float32"
+        self.error = error
+        self.runs = runs if runs is not None else {}
+
+    def run(self, ctx):
+        self.runs[self.op] = self.runs.get(self.op, 0) + 1
+        if self.error is not None:
+            raise self.error
+        return self._record(ctx, Measurement(10.0, 1.5, 9.0, 4))
+
+
+def _session(path=None):
+    return Session(db=str(path) if path else None, timer=Timer(warmup=0, reps=2))
+
+
+# ------------------------------------------------------------------- plans
+def test_plan_dedupe_and_add():
+    p = Plan.instructions(ops=("add", "mul"), opt_levels=("O0", "O3"))
+    assert len(p) == 4
+    # same cross-product again: union is unchanged
+    assert len(p + Plan.instructions(ops=("add", "mul"), opt_levels=("O0", "O3"))) == 4
+    # duplicated probes inside one plan collapse too
+    dup = Plan(tuple(p.probes) * 3).dedupe()
+    assert [q.logical_key() for q in dup] == [q.logical_key() for q in p]
+
+
+def test_plan_filter():
+    p = Plan.instructions(ops=("add", "mul", "sqrt"), opt_levels=("O0", "O3"))
+    assert {q.op for q in p.filter(ops=["add"])} == {"add"}
+    assert {q.opt_level for q in p.filter(opt_levels=["O3"])} == {"O3"}
+    assert len(p.filter(ops=["add"], opt_levels=["O3"])) == 1
+
+
+def test_plan_cross_product_dtypes_categories():
+    full = Plan.instructions(opt_levels=("O3",))
+    fp32 = Plan.instructions(opt_levels=("O3",), dtypes=("float32",))
+    assert 0 < len(fp32) < len(full)
+    assert all(q.dtype == "float32" for q in fp32)
+    special = Plan.instructions(opt_levels=("O3",), categories=("special_math",))
+    assert {q.category for q in special} == {"special_math"}
+
+
+def test_probe_identity_includes_measurement_params():
+    """Non-default fidelity params are part of the cache key: a short-chase
+    quick point must never satisfy a lookup for the standard sweep."""
+    from repro.api.probes import KernelProbe, MemoryProbe
+    from repro.core import membench
+    std, quick = MemoryProbe(8192), MemoryProbe(8192, steps=(512, 1536))
+    assert std.op == "mem.chase.ws8192"
+    assert std.logical_key() != quick.logical_key()
+    assert KernelProbe("fma").op == "kernel.alu_chain.fma"
+    assert KernelProbe("fma", lens=(4, 32)).logical_key() != \
+        KernelProbe("fma").logical_key()
+
+    # the MemPoint round-trip still parses the working set with a suffix
+    result = _session().run(Plan((quick,)))
+    pt = membench.mempoint_from_record(result.measured[0].record)
+    assert pt.working_set_bytes == 8192
+
+
+def test_named_plans():
+    from repro.api import named_plan
+    for name in ("quick", "table2", "memory", "full"):
+        plan = named_plan(name)
+        assert len(plan) > 0
+        keys = [p.logical_key() for p in plan]
+        assert len(keys) == len(set(keys))
+    with pytest.raises(ValueError):
+        named_plan("nope")
+
+
+# ------------------------------------------------------------------ caching
+def test_cache_hit_skips_execution(tmp_path):
+    runs = {}
+    plan = Plan((CountingProbe("a", runs=runs), CountingProbe("b", runs=runs)))
+    db = tmp_path / "db.json"
+
+    first = _session(db).run(plan)
+    assert len(first.measured) == 2 and not first.cached
+    assert runs == {"a": 1, "b": 1}
+
+    # fresh session, same DB file: zero probes execute
+    second = _session(db).run(plan)
+    assert len(second.cached) == 2 and not second.measured and not second.failed
+    assert runs == {"a": 1, "b": 1}
+    assert [r.record.op for r in second.cached] == ["a", "b"]
+
+
+def test_force_remeasures(tmp_path):
+    runs = {}
+    plan = Plan((CountingProbe("a", runs=runs),))
+    db = tmp_path / "db.json"
+    _session(db).run(plan)
+    result = _session(db).run(plan, force=True)
+    assert len(result.measured) == 1
+    assert runs == {"a": 2}
+
+
+def test_resume_after_interrupt(tmp_path):
+    """KeyboardInterrupt mid-plan: completed probes are on disk and resume."""
+    runs = {}
+    db = tmp_path / "db.json"
+    plan = Plan((CountingProbe("a", runs=runs),
+                 CountingProbe("b", error=KeyboardInterrupt(), runs=runs),
+                 CountingProbe("c", runs=runs)))
+    with pytest.raises(KeyboardInterrupt):
+        _session(db).run(plan)
+    assert runs == {"a": 1, "b": 1}  # c never started
+
+    # re-run with the failure gone: a is a cache hit, only b and c execute
+    plan2 = Plan((CountingProbe("a", runs=runs), CountingProbe("b", runs=runs),
+                  CountingProbe("c", runs=runs)))
+    result = _session(db).run(plan2)
+    assert [r.status for r in result.results] == ["cached", "measured", "measured"]
+    assert runs == {"a": 1, "b": 2, "c": 1}
+
+
+# ----------------------------------------------------------------- failures
+def test_structured_failure_recorded_and_persisted(tmp_path):
+    db_path = tmp_path / "db.json"
+    plan = Plan((CountingProbe("ok"), CountingProbe("boom", error=ValueError("bad operand"))))
+    result = _session(db_path).run(plan)
+    assert len(result.measured) == 1 and len(result.failed) == 1
+    failure = result.failed[0].failure
+    assert failure.op == "boom"
+    assert failure.error_type == "ValueError"
+    assert "bad operand" in failure.message
+    assert failure.failed_at
+
+    # persisted to disk alongside the records
+    reloaded = LatencyDB(str(db_path))
+    assert [f.op for f in reloaded.failures()] == ["boom"]
+    assert len(reloaded) == 1
+
+    # a later success supersedes the failure
+    fixed = _session(db_path).run(Plan((CountingProbe("boom"),)))
+    assert len(fixed.measured) == 1
+    assert LatencyDB(str(db_path)).failures() == []
+
+
+def test_failure_does_not_abort_plan():
+    runs = {}
+    plan = Plan((CountingProbe("x", error=RuntimeError("die"), runs=runs),
+                 CountingProbe("y", runs=runs)))
+    result = _session().run(plan)
+    assert [r.status for r in result.results] == ["failed", "measured"]
+    assert runs == {"x": 1, "y": 1}
+
+
+# ---------------------------------------------------------------------- MAD
+def test_instruction_probe_propagates_mad(monkeypatch):
+    monkeypatch.setattr(measure, "measure_op_full",
+                        lambda spec, lv, timer: Measurement(100.0, 7.5, 90.0, 12))
+    spec = next(o for o in chains.default_registry() if o.name == "fma.float32")
+    result = _session().run(Plan((InstructionProbe(spec, "O3"),)))
+    rec = result.measured[0].record
+    assert rec.mad_ns == 7.5
+    assert rec.latency_ns == 100.0
+    assert rec.n_samples == 12
+
+
+def test_table_markdown_surfaces_mad():
+    from repro.core.latency_db import LatencyRecord
+    db = LatencyDB()
+    db.add(LatencyRecord(op="add", category="int_arith", dtype="int32",
+                         opt_level="O3", latency_ns=5.0, mad_ns=1.25, cycles=5.0,
+                         guard=1, net_latency_ns=2.5, device_kind="cpu",
+                         backend="cpu", jax_version="x", n_samples=10))
+    assert "±1.2" in db.table_markdown()
+
+
+# ------------------------------------------------------------ integration
+def test_session_end_to_end_real_probe(tmp_path):
+    """One real instruction probe through the whole stack (fast settings)."""
+    spec = next(o for o in chains.default_registry() if o.name == "fma.float32")
+    session = Session(db=str(tmp_path / "db.json"), timer=Timer(warmup=1, reps=3))
+    result = session.run(Plan((InstructionProbe(spec, "O3"),)))
+    assert result.summary().startswith("1 measured")
+    rec = result.measured[0].record
+    assert rec.latency_ns >= 0.0 and rec.mad_ns >= 0.0
+    assert rec.key() in session.db
+    # and the cache hit on re-run
+    assert len(Session(db=str(tmp_path / "db.json")).run(
+        Plan((InstructionProbe(spec, "O3"),))).cached) == 1

@@ -1,0 +1,51 @@
+"""Smoke test: the ``python -m repro characterize`` CLI, in-process.
+
+Runs the quick plan filtered to a tiny registry subset so the whole
+measure -> flush -> cache-hit -> force cycle executes in seconds.
+"""
+import json
+
+from repro.api import cli
+
+ARGS = ["characterize", "--plan", "quick", "--ops", "add,clock_overhead",
+        "--reps", "2", "--warmup", "0"]
+
+
+def test_characterize_quick_smoke(tmp_path, capsys):
+    db = tmp_path / "db.json"
+    rc = cli.main(ARGS + ["--db", str(db)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "4 measured, 0 cached, 0 failed" in out
+    blob = json.loads(db.read_text())
+    assert {r["op"] for r in blob["records"]} == {"add", "clock_overhead"}
+    assert {r["opt_level"] for r in blob["records"]} == {"O0", "O3"}
+
+    # second run: pure cache hits, zero re-measurements
+    rc = cli.main(ARGS + ["--db", str(db)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 measured, 4 cached, 0 failed" in out
+    assert "all probes were cache hits" in out
+
+    # --force re-measures
+    rc = cli.main(ARGS + ["--db", str(db), "--force"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "4 measured, 0 cached, 0 failed" in out
+
+
+def test_characterize_table_output(tmp_path, capsys):
+    db = tmp_path / "db.json"
+    rc = cli.main(ARGS + ["--db", str(db), "--table"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "| category | op | dtype |" in out
+
+
+def test_bad_flags(tmp_path, capsys):
+    rc = cli.main(ARGS + ["--db", str(tmp_path / "db.json"), "--force", "--resume"])
+    assert rc == 2
+    rc = cli.main(["characterize", "--ops", "no_such_op",
+                   "--db", str(tmp_path / "db.json")])
+    assert rc == 2

@@ -129,10 +129,9 @@ def test_pipeline_parallel_matches_reference():
     out = run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.parallel import pipeline
-from repro.launch.mesh import make_mesh_for
-import jax.sharding as jsh
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jsh.AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 
 def stage_fn(p, x):
     return jnp.tanh(x @ p["w"] + p["b"])

@@ -34,16 +34,15 @@ def test_small_mesh_lower_compile_smoke():
     the multi-pod pattern end-to-end, without the 512-device cost."""
     out = run_with_devices("""
 import jax, jax.numpy as jnp
-import jax.sharding as jsh
 from repro.configs.registry import get
 from repro.models import transformer
 from repro.models.config import Runtime
 from repro.parallel import sharding as shd
 from repro import optim
+from repro.launch.mesh import make_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jsh.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = get("granite-3-8b").smoke
 rt = Runtime(remat=True, xent_chunk=16, moe_groups=4)
 rules = shd.lm_rules(fsdp=True)

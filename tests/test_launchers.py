@@ -30,10 +30,12 @@ def test_paper_suite_config():
 
 
 @pytest.mark.slow
-def test_train_cli_smoke():
+def test_train_cli_smoke(tmp_path):
+    # fresh dir per run: a leftover checkpoint makes the trainer resume at
+    # step 3 and run 0 steps
     out = _run_cli(["repro.launch.train", "--arch", "granite-3-8b",
                     "--steps", "3", "--seq-len", "32", "--global-batch", "2",
-                    "--checkpoint-dir", "/tmp/repro_cli_test"])
+                    "--checkpoint-dir", str(tmp_path / "ckpt")])
     assert "done: 3 steps" in out
 
 
