@@ -6,6 +6,7 @@ Paper artifact -> bench:
   Table III version/level optimization deltas   -> bench_optlevels
   Fig. 6  global/L1/L2 + texture analog         -> bench_memory_hierarchy
   Table IV shared/constant memory analog        -> bench_onchip_memory
+  Fig. 3  in-pipeline vs dispatch sampling      -> bench_inkernel_vs_dispatch
   (framework) attention/kernel-path comparison  -> bench_attention_impls
   (deliverable g) roofline table from dry-runs  -> bench_roofline
 """
@@ -130,6 +131,33 @@ def bench_onchip_memory(timer: Timer) -> list[tuple[str, float, str]]:
              "interpret mode on CPU)"),
             ("onchip.host_chase", host.latency_ns / 1e3,
              "host-level chase, same working set")]
+
+
+# ------------------------------------------ Fig. 3: in-pipeline vs dispatch
+def bench_inkernel_vs_dispatch(timer: Timer, quick: bool = False
+                               ) -> list[tuple[str, float, str]]:
+    """Paired dispatch-vs-in-kernel table (repro.inkernel): every eligible op
+    measured both at dispatch granularity and as a Pallas fori_loop chain,
+    side by side. On TPU the in-kernel column is the paper's in-pipeline
+    number; in interpret mode (this container) it validates the machinery."""
+    cats = ("int_arith", "fp32") if quick else None
+    keep = {"add", "mul", "mad", "div.s.runtime", "fma.float32",
+            "div.runtime.float32", "add.float32"} if quick else None
+    session = Session(db=f"{RESULTS}/latency_db.json", timer=timer)
+    session.run(Plan.inkernel(ops=keep, categories=cats), force=True)
+    db = session.db
+    md = db.compare_markdown()
+    with open(f"{RESULTS}/inkernel_vs_dispatch.md", "w") as f:
+        f.write(md)
+    rows = []
+    for cat in chains.CATEGORIES:
+        recs = [r for r in db.query(opt_level="O3")
+                if r.category == cat and r.op.startswith("inkernel.")]
+        if recs:
+            med = float(np.median([r.latency_ns for r in recs]))
+            rows.append((f"inkernel.{cat}.median", med / 1e3,
+                         f"{len(recs)} ops in-kernel (paper Fig. 3 method)"))
+    return rows
 
 
 # ------------------------------------------------- framework: attention path

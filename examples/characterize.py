@@ -8,7 +8,7 @@ PPT-GPU-style consumption the paper targets).
 The session is cache-aware: re-running this script is free (every probe is a
 cache hit against the DB), an interrupted run resumes where it stopped, and
 ``--force`` re-measures. The same pipeline is available as
-``python -m repro characterize --plan quick|table2|memory|full``.
+``python -m repro characterize --plan quick|table2|memory|inkernel|full``.
 """
 import argparse
 

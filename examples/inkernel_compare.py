@@ -1,0 +1,41 @@
+"""In-pipeline vs dispatch sampling, the paper's defining contrast, end to end:
+measure a handful of table rows both as host-dispatched chains and as Pallas
+``fori_loop`` chains inside a kernel (repro.inkernel), then print the paired
+comparison table. Cache-aware: re-running is free, --force re-measures.
+
+  PYTHONPATH=src python examples/inkernel_compare.py [--ops add,fma.float32]
+"""
+import argparse
+
+from repro.api import Plan, Session
+from repro.core.timing import Timer
+
+DEFAULT_OPS = ("add", "mul", "div.s.runtime", "fma.float32",
+               "div.runtime.float32", "rsqrt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", default=",".join(DEFAULT_OPS),
+                    help="comma-separated registry op names")
+    ap.add_argument("--db", default="/tmp/latency_db.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    session = Session(db=args.db, timer=Timer(warmup=1, reps=8))
+    plan = Plan.inkernel(ops=[o.strip() for o in args.ops.split(",")])
+    result = session.run(plan, force=args.force)
+    print(f"plan '{plan.name}': {result.summary()}")
+    for r in result.failed:
+        print(f"  FAILED {r.failure.op}: {r.failure.error_type}: "
+              f"{r.failure.message}")
+
+    print("\n== dispatch vs in-kernel (paper's in-pipeline method) ==")
+    print(session.db.compare_markdown())
+    print("\nOn TPU the in-kernel column is the true in-pipeline latency; in "
+          "interpret mode (CPU) it validates the kernels and the slope "
+          "algebra. Same sweep: python -m repro characterize --plan inkernel")
+
+
+if __name__ == "__main__":
+    main()

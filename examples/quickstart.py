@@ -1,6 +1,8 @@
 """Quickstart: train a small LM end-to-end on CPU with the full production
 path (data pipeline -> train step -> fault-tolerant trainer -> checkpoints),
-then generate from it.
+generate from it, then characterize the ALU ops the decode step leans on
+through the ``repro.api`` front door (cached, resumable — the same pipeline
+as ``python -m repro characterize``).
 
   PYTHONPATH=src python examples/quickstart.py [--steps 200]
 """
@@ -10,6 +12,8 @@ import tempfile
 import numpy as np
 
 from repro import optim
+from repro.api import Plan, Session
+from repro.core.timing import Timer
 from repro.models.config import ModelConfig, Runtime
 from repro.serving import Engine
 from repro.training import TrainConfig, train
@@ -37,6 +41,16 @@ def main() -> None:
     eng = Engine(res.params, cfg, rt)
     out = eng.generate([[1, 2, 3, 4], [10, 11, 12, 13]], max_new=12)
     print("greedy continuations:", out.tokens.tolist())
+
+    # What does one step of this model cost at the instruction level? Measure
+    # the dominant ALU ops with the characterization Session (in-memory DB;
+    # point db= at a path to cache across runs).
+    session = Session(timer=Timer(warmup=1, reps=5))
+    result = session.run(Plan.instructions(
+        ops=("fma.float32", "add.float32", "mul.float32"), opt_levels=("O3",)))
+    print("\nmeasured ALU latencies (paper Table II rows):")
+    for rec in result.records():
+        print(f"  {rec.op}@O3: {rec.latency_ns:.2f} ns/op (±{rec.mad_ns:.2f})")
 
 
 if __name__ == "__main__":

@@ -1,13 +1,15 @@
 """Serve a small model with batched requests: prefill + decode engine, ragged
-prompts, greedy and sampled decoding.
+prompts, greedy and sampled decoding. Throughput is reported through the
+measurement core (``Timer``: warmup + median-of-reps), not a one-shot
+stopwatch, so the number is comparable to ``python -m repro characterize``
+output.
 
   PYTHONPATH=src python examples/serve_demo.py
 """
-import time
-
 import jax
 import numpy as np
 
+from repro.core.timing import Timer
 from repro.models import transformer
 from repro.models.config import ModelConfig, Runtime
 from repro.serving import Engine
@@ -25,12 +27,15 @@ def main() -> None:
     rng = np.random.RandomState(0)
     batch = [rng.randint(1, 1024, size=rng.randint(4, 12)).tolist()
              for _ in range(8)]
-    t0 = time.perf_counter()
-    out = eng.generate(batch, max_new=24)
-    dt = time.perf_counter() - t0
+    out = eng.generate(batch, max_new=24)  # warms compile; tokens printed below
+    # median-of-3 (compile excluded by the call above), like every other
+    # measurement in this repo
+    m = Timer(warmup=0, reps=3).time_callable(
+        lambda: eng.generate(batch, max_new=24))
     toks = out.tokens.size
+    dt = m.median_ns / 1e9
     print(f"batched 8 ragged requests, {toks} new tokens in {dt*1e3:.0f} ms "
-          f"({toks/dt:.0f} tok/s on host CPU)")
+          f"median (±{m.mad_ns/1e6:.1f} ms MAD; {toks/dt:.0f} tok/s on host CPU)")
     for i, row in enumerate(out.tokens[:4]):
         print(f"  req{i} (prompt {out.prompt_lens[i]} toks):", row.tolist())
     sampled = eng.generate(batch[:2], max_new=8, temperature=0.8, seed=1)

@@ -7,9 +7,11 @@ The characterization front door is ``repro.api`` (``Session`` / ``Plan`` /
 
     from repro import Session, Plan
 
-CLI: ``python -m repro characterize --plan quick|table2|memory|full``.
+CLI: ``python -m repro characterize --plan quick|table2|memory|inkernel|full``.
+In-kernel (Pallas) probes — the paper's in-pipeline method — live in
+``repro.inkernel`` (see docs/inkernel.md).
 """
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
 _API_EXPORTS = ("Session", "Plan", "Probe", "ResultSet", "named_plan")
 

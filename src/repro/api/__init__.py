@@ -13,17 +13,19 @@ that pipeline as an API:
   failures).
 * :class:`ResultSet` — per-probe outcomes plus report helpers.
 
-CLI: ``python -m repro characterize --plan quick|table2|memory|full``.
+CLI: ``python -m repro characterize --plan quick|table2|memory|inkernel|full``.
 The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
 ``membench.sweep``) are deprecation shims over this package.
 """
 from repro.api.plan import PLAN_NAMES, QUICK_OPS, Plan, named_plan
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
-                              KernelProbe, MemoryProbe, Probe, ProbeContext)
+                              KernelChainProbe, KernelProbe, MemoryProbe,
+                              Probe, ProbeContext)
 from repro.api.session import ProbeResult, ResultSet, Session
 
 __all__ = [
     "PLAN_NAMES", "QUICK_OPS", "Plan", "named_plan",
-    "ClockOverheadProbe", "InstructionProbe", "KernelProbe", "MemoryProbe",
-    "Probe", "ProbeContext", "ProbeResult", "ResultSet", "Session",
+    "ClockOverheadProbe", "InstructionProbe", "KernelChainProbe",
+    "KernelProbe", "MemoryProbe", "Probe", "ProbeContext", "ProbeResult",
+    "ResultSet", "Session",
 ]

@@ -6,6 +6,7 @@ Examples::
     python -m repro characterize --plan quick --db /tmp/db.json   # all cache hits
     python -m repro characterize --plan full --db /tmp/db.json --force
     python -m repro characterize --plan table2 --ops add,mul --table
+    python -m repro characterize --plan inkernel --table   # in-pipeline probes
 
 Scheduling is cache-aware by default: probes already in the DB for this
 (device, backend, jax version) are reported as cache hits and skipped, which
@@ -47,7 +48,12 @@ def build_parser() -> argparse.ArgumentParser:
     ch.add_argument("--opt-levels", default=None,
                     help="comma-separated opt-level filter (e.g. O0,O3)")
     ch.add_argument("--table", action="store_true",
-                    help="print the Table II analog after the run")
+                    help="print the Table II analog after the run (plus the "
+                         "dispatch-vs-in-kernel pairing when the DB holds "
+                         "inkernel.* records)")
+    ch.add_argument("--recover", action="store_true",
+                    help="salvage complete records from a truncated/corrupt "
+                         "DB file instead of refusing to load it")
     ch.add_argument("--warmup", type=int, default=2)
     ch.add_argument("--reps", type=int, default=10,
                     help="timed repetitions per measurement point")
@@ -70,11 +76,14 @@ def cmd_characterize(args: argparse.Namespace) -> int:
         return 2
 
     try:
-        session = Session(db=args.db,
+        from repro.core.latency_db import LatencyDB
+
+        db = LatencyDB.recover(args.db) if args.recover else args.db
+        session = Session(db=db,
                           timer=Timer(warmup=args.warmup, reps=args.reps))
     except Exception as e:  # unreadable/corrupt DB file: report, don't clobber
-        print(f"error: could not load DB {args.db}: {type(e).__name__}: {e}",
-              file=sys.stderr)
+        print(f"error: could not load DB {args.db}: {type(e).__name__}: {e} "
+              "(pass --recover to salvage complete records)", file=sys.stderr)
         return 2
     print(f"plan '{plan.name}': {len(plan)} probes -> {args.db} "
           f"[{session.env['backend']}/{session.env['device_kind']}, "
@@ -90,6 +99,10 @@ def cmd_characterize(args: argparse.Namespace) -> int:
     if args.table:
         print()
         print(result.table_markdown())
+        compare = session.db.compare_markdown()
+        if compare.count("\n") > 1:  # header + separator + >=1 paired row
+            print("\n== dispatch vs in-kernel (paper's in-pipeline method) ==")
+            print(compare)
     return 1 if result.failed else 0
 
 

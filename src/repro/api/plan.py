@@ -19,7 +19,8 @@ from repro.core.chains import OpSpec
 from repro.core.optlevels import OPT_LEVELS
 
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
-                              KernelProbe, MemoryProbe, Probe)
+                              KernelChainProbe, KernelProbe, MemoryProbe,
+                              Probe)
 
 # The CLI/CI keep-set: one representative per interesting latency class,
 # including the divisor-taxonomy splits the paper highlights.
@@ -27,7 +28,7 @@ QUICK_OPS = ("add", "mul", "mad", "div.s.regular", "div.s.irregular",
              "div.s.runtime", "fma.float32", "div.runtime.float32", "sqrt",
              "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16")
 
-PLAN_NAMES = ("quick", "table2", "memory", "full")
+PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +107,24 @@ class Plan:
         return Plan(tuple(KernelProbe(op, lens=lens) for op in kernel_ops),
                     name="kernels")
 
+    @staticmethod
+    def inkernel(registry: Sequence[OpSpec] | None = None,
+                 ops: Iterable[str] | None = None,
+                 categories: Iterable[str] | None = None,
+                 lens: tuple[int, int] | None = None,
+                 dispatch_pair: bool = True) -> "Plan":
+        """In-kernel Pallas chain per eligible registry spec (paper's
+        in-pipeline method), paired by default with the same spec's
+        dispatch-level O3 probe so one run fills both sides of the
+        dispatch-vs-in-kernel comparison table."""
+        from repro import inkernel as ik
+
+        specs = ik.supported_specs(registry, ops=ops, categories=categories)
+        probes: list[Probe] = [KernelChainProbe(s, lens=lens) for s in specs]
+        if dispatch_pair:
+            probes += [InstructionProbe(s, "O3") for s in specs]
+        return Plan(_dedupe(tuple(probes)), name="inkernel")
+
 
 def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
     seen: set[tuple] = set()
@@ -120,7 +139,7 @@ def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
 
 
 def named_plan(name: str) -> Plan:
-    """The CLI's plan registry. quick | table2 | memory | full."""
+    """The CLI's plan registry. quick | table2 | memory | inkernel | full."""
     if name == "quick":
         plan = (Plan.clock_overhead(("O0", "O3"))
                 + Plan.instructions(ops=QUICK_OPS, opt_levels=("O0", "O3"))
@@ -131,11 +150,14 @@ def named_plan(name: str) -> Plan:
                 + Plan.instructions(opt_levels=("O0", "O3")))
     elif name == "memory":
         plan = Plan.memory()
+    elif name == "inkernel":
+        plan = Plan.inkernel()
     elif name == "full":
         plan = (Plan.clock_overhead(OPT_LEVELS)
                 + Plan.instructions(opt_levels=OPT_LEVELS)
                 + Plan.memory()
-                + Plan.kernels(("fma", "add", "rsqrt")))
+                + Plan.kernels(("fma", "add", "rsqrt"))
+                + Plan.inkernel())
     else:
         raise ValueError(f"unknown plan {name!r}; choose from {PLAN_NAMES}")
     return dataclasses.replace(plan, name=name)

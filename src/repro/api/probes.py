@@ -16,6 +16,9 @@ Concrete probes wrap the existing measurement machinery:
   opt level (paper Fig. 5).
 * :class:`KernelProbe` — an in-kernel (Pallas) dependent ALU chain, the
   device-side analog of the paper's timed PTX block.
+* :class:`KernelChainProbe` — any registry :class:`OpSpec` lowered into a
+  Pallas ``fori_loop`` chain (``repro.inkernel``): the paper's in-pipeline
+  measurement, one probe per table row.
 
 New probe types (energy counters, occupancy sweeps, ...) subclass
 :class:`Probe` and immediately gain caching, resumability and structured
@@ -24,6 +27,7 @@ failure handling from the session scheduler.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable, Mapping
 
 from repro.core import measure, membench
@@ -74,10 +78,17 @@ class Probe:
 
     # ------------------------------------------------------------------ util
     def _record(self, ctx: ProbeContext, m: Measurement, *, guard: int = 0,
-                notes: str = "") -> LatencyRecord:
-        """Build the result record from a Measurement, netting out guards."""
+                notes: str = "", baseline: float | None = None) -> LatencyRecord:
+        """Build the result record from a Measurement, netting out guards.
+
+        ``baseline`` overrides the session's dispatch-level add baseline for
+        probes whose guard ops run under a different methodology (in-kernel).
+        """
         ns = max(m.median_ns, 0.0)
-        base = ctx.baseline_ns(self.opt_level) if guard else 0.0
+        if guard:
+            base = baseline if baseline is not None else ctx.baseline_ns(self.opt_level)
+        else:
+            base = 0.0
         return LatencyRecord(
             op=self.op, category=self.category, dtype=self.dtype,
             opt_level=self.opt_level, latency_ns=ns, mad_ns=m.mad_ns,
@@ -197,3 +208,77 @@ class KernelProbe(Probe):
         m = ctx.timer.slope(fn_by_len, *self.lens, x, a, reps=self.reps)
         return self._record(
             ctx, m, notes=f"pallas alu_chain tile={self.shape} lens={self.lens}")
+
+
+class KernelChainProbe(Probe):
+    """One registry :class:`OpSpec` as an in-kernel Pallas chain (the paper's
+    in-pipeline measurement, ``repro.inkernel``).
+
+    Shares the record schema and category with the spec's dispatch-level
+    :class:`InstructionProbe`, but under the op name ``inkernel.<name>`` —
+    both rows coexist in one LatencyDB, which is what
+    ``LatencyDB.compare_markdown`` pairs up. ``opt_level`` is pinned to
+    ``"O3"``: a Pallas kernel is always fully compiled, there is no eager
+    analog. Non-default chain lengths / tiles are a different fidelity and
+    therefore part of the cache identity, like ``MemoryProbe.steps``
+    (``lens=None`` means the library default, ``inkernel.INKERNEL_LENS`` —
+    the single source of truth for what "unsuffixed fidelity" means).
+
+    Guard netting stays in-method: the ``guard x add`` subtraction uses an
+    *in-kernel* add baseline (measured once per session timer and chain
+    lengths), never the dispatch-level baseline — mixing the two
+    methodologies would clamp cheap guarded ops to a net of 0 on hardware
+    where in-kernel latencies are far below dispatch ones.
+    """
+
+    # per-(timer, lens) in-kernel add-pair baseline; WeakKey so session
+    # timers don't leak
+    _baselines: "weakref.WeakKeyDictionary" = None  # set below the class
+
+    def __init__(self, spec: OpSpec, lens: tuple[int, int] | None = None,
+                 shape: tuple[int, int] | None = None, reps: int = 5):
+        from repro import inkernel
+
+        if not inkernel.supported(spec):
+            raise ValueError(f"spec {spec.name!r} cannot lower in-kernel")
+        self.spec = spec
+        self.lens = tuple(lens) if lens is not None else tuple(inkernel.INKERNEL_LENS)
+        self.shape = tuple(shape) if shape is not None else None
+        self.reps = reps
+        self.opt_level = "O3"
+        self.dtype = spec.dtype
+        self.category = spec.category
+        self.op = f"inkernel.{spec.name}"
+        if self.lens != tuple(inkernel.INKERNEL_LENS):
+            self.op += f".l{self.lens[0]}-{self.lens[1]}"
+        if self.shape is not None:
+            self.op += f".t{self.shape[0]}x{self.shape[1]}"
+
+    def _inkernel_baseline_ns(self, ctx: ProbeContext) -> float:
+        """In-kernel 1-cycle-class baseline: the ``add`` spec's (add ^ xor)
+        pair measured in-kernel at the same lens, / (1 + its guard)."""
+        from repro import inkernel
+        from repro.core import chains
+
+        per_timer = KernelChainProbe._baselines.setdefault(ctx.timer, {})
+        if self.lens not in per_timer:
+            base = next(o for o in chains.default_registry() if o.name == "add")
+            m = inkernel.measure_inkernel_full(base, lens=self.lens,
+                                               timer=ctx.timer, reps=self.reps)
+            per_timer[self.lens] = max(m.median_ns, 0.0) / (1 + base.guard)
+        return per_timer[self.lens]
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        from repro import inkernel
+
+        m = inkernel.measure_inkernel_full(self.spec, lens=self.lens,
+                                           shape=self.shape, timer=ctx.timer,
+                                           reps=self.reps)
+        baseline = self._inkernel_baseline_ns(ctx) if self.spec.guard else None
+        return self._record(
+            ctx, m, guard=self.spec.guard, baseline=baseline,
+            notes=f"pallas fori_loop chain lens={self.lens} "
+                  f"tile={self.shape or inkernel.default_tile(self.spec.dtype)}")
+
+
+KernelChainProbe._baselines = weakref.WeakKeyDictionary()

@@ -7,12 +7,13 @@ DB — that is how the paper's Table III (CUDA 9.0 vs 10.0) diff is produced.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 from typing import Iterable
 
 import jax
 
-from repro.utils import dump_json, load_json, markdown_table, timestamp
+from repro.utils import dump_json, load_json, logger, markdown_table, timestamp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +138,53 @@ class LatencyDB:
         for raw in blob.get("failures", ()):  # absent in pre-1.1 DB files
             self.add_failure(ProbeFailure(**raw))
 
+    @classmethod
+    def recover(cls, path: str) -> "LatencyDB":
+        """Salvage a truncated/corrupt DB file instead of raising.
+
+        A sweep killed mid-``save`` (or a partial copy) leaves a file that
+        strict :meth:`load` rejects wholesale. Measurements are expensive, so
+        this decodes every complete record object individually and drops only
+        the damaged tail. Returns a DB bound to ``path`` (a subsequent
+        ``save`` rewrites it whole); on an intact file it is identical to the
+        normal constructor.
+        """
+        db = cls()
+        db.path = path
+        if not os.path.exists(path):
+            return db
+        try:
+            db.load(path)
+            return db
+        except Exception:  # noqa: BLE001 - fall through to per-record salvage
+            pass
+        text = open(path).read()
+        decoder = json.JSONDecoder()
+        rec_fields = {f.name for f in dataclasses.fields(LatencyRecord)}
+        rec_required = rec_fields - {"measured_at", "notes"}
+        fail_fields = {f.name for f in dataclasses.fields(ProbeFailure)}
+        fail_required = fail_fields - {"failed_at"}
+        pos = text.find("{", text.find("{") + 1)  # skip the top-level object
+        while pos >= 0:
+            try:
+                obj, end = decoder.raw_decode(text, pos)
+            except json.JSONDecodeError:
+                pos = text.find("{", pos + 1)
+                continue
+            if isinstance(obj, dict):
+                keys = set(obj)
+                try:  # recovery must never raise on damaged objects
+                    if rec_required <= keys <= rec_fields:
+                        db.add(LatencyRecord(**obj))
+                    elif fail_required <= keys <= fail_fields:
+                        db.add_failure(ProbeFailure(**obj))
+                except Exception:  # noqa: BLE001 - e.g. wrong value types
+                    pass
+            pos = text.find("{", max(end, pos + 1))
+        logger.warning("recovered %d records + %d failures from corrupt DB %s",
+                       len(db), len(db.failures()), path)
+        return db
+
     # -------------------------------------------------------------- reports
     def table_markdown(self, opt_levels: tuple[str, ...] = ("O3", "O0")) -> str:
         """Table II analog: rows = ops, columns = Optimized / Non-Optimized."""
@@ -157,6 +205,42 @@ class LatencyDB:
         headers = ["category", "op", "dtype"] + [
             {"O3": "Optimized", "O0": "Non-Optimized"}.get(lv, lv) for lv in opt_levels]
         return markdown_table(headers, rows)
+
+    def compare_markdown(self, prefix: str = "inkernel.",
+                         opt_level: str = "O3") -> str:
+        """Dispatch-vs-in-kernel pairing: ops measured both ways, side by side.
+
+        Pairs every ``<op>`` record with its ``<prefix><op>`` twin at the same
+        dtype, opt level **and environment** — the DB accumulates runs from
+        multiple devices/jax versions (that is how Table III diffs are made),
+        and a CPU-dispatch vs TPU-in-kernel ratio would be meaningless.
+        Fidelity-suffixed in-kernel variants like ``inkernel.add.l4-32`` are a
+        different experiment and are *not* paired. The ratio column is the
+        in-pipeline fraction of the dispatch-level number — the
+        launch/dispatch blur the paper's in-pipeline sampling removes.
+        """
+        plain: dict[tuple, LatencyRecord] = {}
+        inker: dict[tuple, LatencyRecord] = {}
+        for r in self._records.values():
+            if r.opt_level != opt_level:
+                continue
+            env = (r.device_kind, r.backend, r.jax_version)
+            if r.op.startswith(prefix):
+                inker[env + (r.op[len(prefix):], r.dtype)] = r
+            else:
+                plain[env + (r.op, r.dtype)] = r
+        rows = []
+        for k in sorted(set(plain) & set(inker), key=lambda k: (
+                plain[k].category, k)):
+            d, ik = plain[k], inker[k]
+            ratio = (f"{ik.latency_ns / d.latency_ns:.3f}"
+                     if d.latency_ns > 0 else "—")
+            rows.append([d.category, k[3], k[4],
+                         f"{d.latency_ns:.2f}±{d.mad_ns:.2f}",
+                         f"{ik.latency_ns:.2f}±{ik.mad_ns:.2f}", ratio])
+        return markdown_table(
+            ["category", "op", "dtype", f"dispatch {opt_level} (ns)",
+             "in-kernel (ns)", "in-kernel/dispatch"], rows)
 
     def diff_markdown(self, key_a: str, key_b: str, field: str = "jax_version",
                       opt_level: str = "O3", rel_threshold: float = 0.10) -> str:

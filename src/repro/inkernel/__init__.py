@@ -1,0 +1,28 @@
+"""``repro.inkernel`` — the paper's *in-pipeline* probes, inside Pallas kernels.
+
+The dispatch-level path (``repro.core.measure``) times a jitted region from
+the host, so every number includes the host->device round trip that the
+two-length slope must cancel. The paper instead samples ``%clock`` around one
+dependent instruction *inside* the kernel. This subsystem is the TPU analog:
+
+* :func:`build_chain` / :func:`tiles` — lower any registry ``OpSpec.step``
+  into a Pallas kernel whose body is a ``fori_loop`` dependent chain on a
+  VMEM-resident tile (see ``repro.kernels.opchain``);
+* :func:`measure_inkernel_full` — per-op latency from the slope between two
+  in-kernel chain lengths, reusing ``Timer.slope`` so the DMA + launch
+  overhead cancels exactly as the paper's clock-overhead subtraction;
+* :func:`supported` / :func:`supported_specs` — the lowering policy (64-bit
+  carries stay on the dispatch path: TPUs lack native i64/f64 lanes).
+
+The scheduled front door is :class:`repro.api.KernelChainProbe` (plan name
+``inkernel``), which adds LatencyDB caching, resume and structured failures
+on top. See docs/inkernel.md for the methodology mapping to the paper.
+"""
+from repro.inkernel.factory import (build_chain, default_tile, supported,
+                                    supported_specs, tiles)
+from repro.inkernel.measure import INKERNEL_LENS, measure_inkernel_full
+
+__all__ = [
+    "INKERNEL_LENS", "build_chain", "default_tile", "measure_inkernel_full",
+    "supported", "supported_specs", "tiles",
+]

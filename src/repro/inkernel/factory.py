@@ -1,0 +1,68 @@
+"""Lowering policy + kernel construction for in-kernel chain probes.
+
+Turns one :class:`~repro.core.chains.OpSpec` into a runnable Pallas chain:
+the carry and operand scalars become VPU-shaped tiles (every lane runs the
+same dependent chain, which is also how the paper's warp executes one timed
+instruction), and ``OpSpec.step`` becomes the ``fori_loop`` body of
+``repro.kernels.opchain.op_chain``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.chains import OpSpec, default_registry
+from repro.kernels.opchain import op_chain
+
+Array = Any
+
+# 64-bit carries stay on the dispatch path: TPUs have no native i64/f64 lanes
+# and Mosaic will not lower them; x64 specs keep their Table II row via
+# InstructionProbe instead.
+_X64_DTYPES = ("int64", "uint64", "float64")
+
+
+def supported(spec: OpSpec) -> bool:
+    """True if ``spec`` can run as an in-kernel Pallas chain."""
+    return not spec.requires_x64 and spec.dtype not in _X64_DTYPES
+
+
+def supported_specs(registry: Sequence[OpSpec] | None = None,
+                    ops: Iterable[str] | None = None,
+                    categories: Iterable[str] | None = None) -> list[OpSpec]:
+    """The in-kernel-eligible slice of the registry, optionally filtered."""
+    registry = list(registry if registry is not None else default_registry())
+    keep_ops = set(ops) if ops is not None else None
+    keep_cats = set(categories) if categories is not None else None
+    return [s for s in registry if supported(s)
+            and (keep_ops is None or s.name in keep_ops)
+            and (keep_cats is None or s.category in keep_cats)]
+
+
+def default_tile(dtype: str) -> tuple[int, int]:
+    """One VPU vreg for the dtype: (8, 128) sublanes x lanes, doubled
+    sublanes for 16-bit packing (the TPU tiling constraint)."""
+    return (16, 128) if jnp.dtype(dtype).itemsize == 2 else (8, 128)
+
+
+def tiles(spec: OpSpec, shape: tuple[int, int] | None = None
+          ) -> tuple[Array, tuple[Array, ...]]:
+    """Carry + operand tiles for ``spec``: its scalar values, broadcast."""
+    shape = shape or default_tile(spec.dtype)
+    carry = jnp.full(shape, spec.init, spec.dtype)
+    operands = tuple(jnp.full(shape, v, spec.dtype) for v in spec.operands)
+    return carry, operands
+
+
+def build_chain(spec: OpSpec, n: int, *, interpret: bool | None = None
+                ) -> Callable[..., jax.Array]:
+    """Jitted ``(carry_tile, *operand_tiles) -> out_tile`` of an n-long chain."""
+    if not supported(spec):
+        raise ValueError(
+            f"spec {spec.name!r} (dtype={spec.dtype}, requires_x64="
+            f"{spec.requires_x64}) cannot lower in-kernel; use the dispatch "
+            "path (InstructionProbe)")
+    return functools.partial(op_chain, step=spec.step, n=n, interpret=interpret)

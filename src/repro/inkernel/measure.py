@@ -1,0 +1,37 @@
+"""Slope extraction for in-kernel chains (the paper's Fig. 5 algebra).
+
+Two kernels differing only in chain length share the identical DMA-in, DMA-out
+and launch path, so ``(T(n2) - T(n1)) / (n2 - n1)`` is the pure in-pipeline
+per-op cost — the same cancellation the paper gets by subtracting the
+calibrated ``%clock`` read overhead. Reuses :meth:`Timer.slope` unchanged
+(min-statistics noise floor included) so dispatch-level and in-kernel numbers
+are produced by one algebra and stay directly comparable.
+"""
+from __future__ import annotations
+
+from repro.core.chains import OpSpec
+from repro.core.timing import Measurement, Timer
+from repro.inkernel.factory import build_chain, tiles
+
+# In-kernel chains are compiled (never eager), so both lengths stay short:
+# fori_loop keeps compile time O(1) in n, and 8 vs 64 already puts the per-op
+# signal well above the (cancelled) launch overhead.
+INKERNEL_LENS = (8, 64)
+
+
+def measure_inkernel_full(spec: OpSpec, lens: tuple[int, int] = INKERNEL_LENS,
+                          shape: tuple[int, int] | None = None,
+                          timer: Timer | None = None,
+                          interpret: bool | None = None,
+                          reps: int | None = None) -> Measurement:
+    """Per-op in-kernel latency for ``spec`` with dispersion (median + MAD)."""
+    timer = timer or Timer()
+    n1, n2 = lens
+    if spec.max_chain is not None:
+        n1, n2 = min(n1, max(spec.max_chain // 3, 1)), min(n2, spec.max_chain)
+    carry, operands = tiles(spec, shape)
+
+    def fn_by_len(n: int):
+        return build_chain(spec, n, interpret=interpret)
+
+    return timer.slope(fn_by_len, n1, n2, carry, *operands, reps=reps)

@@ -1,0 +1,58 @@
+"""Generalized in-kernel dependent-op chain: any registry step as a Pallas kernel.
+
+``alu_chain`` hard-codes five ops; this factory lowers *any* ``OpSpec.step``
+from the instruction table (core/chains.py) into a Pallas kernel whose body is
+a ``lax.fori_loop`` carrying the chain value through ``n`` dependent
+applications of the step. This is the paper's Fig. 3 timed block moved inside
+the kernel: the carry tile and every operand tile are DMA'd into VMEM once by
+their BlockSpecs (residency-pinned, like the paper's register-resident
+operands), and the loop-carried dependence forbids the compiler from
+pipelining, reordering or dead-coding the measured op — the same
+dependent-dummy-op defence the host-level chains use, now enforced by the
+loop carry instead of straight-line dataflow.
+
+``fori_loop`` (not Python unrolling) keeps trace/compile time O(1) in ``n``,
+so two chain lengths can be compiled cheaply and differenced with
+``Timer.slope`` to cancel the DMA + launch overhead exactly (paper Fig. 5).
+On this container the kernel runs in interpret mode (XLA emulation); on TPU
+the identical code lowers to a real Mosaic kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import use_interpret
+
+
+def _opchain_kernel(x_ref, *rest, step, n: int):
+    *op_refs, o_ref = rest
+    ops = tuple(r[...] for r in op_refs)  # loaded once: VMEM-resident operands
+    x = x_ref[...]
+    o_ref[...] = lax.fori_loop(0, n, lambda _, c: step(c, *ops), x)
+
+
+@functools.partial(jax.jit, static_argnames=("step", "n", "interpret"))
+def op_chain(x: jax.Array, *operands: jax.Array, step, n: int,
+             interpret: bool | None = None) -> jax.Array:
+    """Apply ``step`` ``n`` times to the carry tile ``x`` inside one kernel.
+
+    ``x`` and every operand must share one tile shape (use (8, 128) for a
+    32-bit VPU vreg, (16, 128) for 16-bit dtypes). ``step`` must be a stable
+    function object (registry steps are: ``default_registry`` is cached), as
+    it keys the jit cache.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    shape = x.shape
+    bs = pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    return pl.pallas_call(
+        functools.partial(_opchain_kernel, step=step, n=n),
+        grid=(1,),
+        in_specs=[bs] * (1 + len(operands)),
+        out_specs=bs,
+        out_shape=jax.ShapeDtypeStruct(shape, x.dtype),
+        interpret=interpret,
+    )(x, *operands)

@@ -10,7 +10,8 @@ from repro.kernels.chase import chase
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode
 from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.opchain import op_chain
 from repro.kernels.rmsnorm import rmsnorm
 
 __all__ = ["alu_chain", "chase", "flash_attention", "flash_decode",
-           "mamba_scan", "rmsnorm"]
+           "mamba_scan", "op_chain", "rmsnorm"]

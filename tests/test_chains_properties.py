@@ -1,0 +1,70 @@
+"""Property-based stability + guard-accounting invariants, every registry row.
+
+The measurement is only valid if (a) a chain of any length up to the measured
+256 stays finite and dtype-stable — otherwise the timed region contains
+NaN-path work the paper's numbers never see — and (b) ``OpSpec.guard``
+honestly counts the extra anti-optimization ops inside ``step``, because
+reporting subtracts ``guard x add-baseline`` and an overcounted guard would
+push net latencies negative. Runs through the in-repo hypothesis stub when
+the real package is absent (tests/_hypothesis_stub.py).
+"""
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chains
+
+REG = chains.default_registry()
+
+
+def _ctx(spec):
+    if spec.requires_x64 or spec.dtype in ("int64", "uint64", "float64"):
+        return jax.experimental.enable_x64()
+    return contextlib.nullcontext()
+
+
+@pytest.mark.parametrize("spec", REG, ids=lambda s: s.name)
+@given(n=st.integers(min_value=1, max_value=256))
+@settings(max_examples=5, deadline=None)
+def test_chain_stable_at_any_length(spec, n):
+    """Finite, non-NaN, dtype-invariant carry for every chain length."""
+    with _ctx(spec):
+        out = chains.chain_fn(spec, n)(spec.carry(), *spec.operand_arrays())
+        arr = jnp.asarray(out)
+        assert arr.dtype == jnp.dtype(spec.dtype), \
+            f"{spec.name}: carry dtype drifted to {arr.dtype} at n={n}"
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            assert bool(jnp.isfinite(arr)), f"{spec.name} diverged at n={n}"
+
+
+@given(spec=st.sampled_from(REG))
+@settings(max_examples=25, deadline=None)
+def test_operands_match_carry_dtype(spec):
+    """Operand tiles are built in the carry dtype: a silent upcast would add
+    convert ops inside the timed chain."""
+    with _ctx(spec):
+        carry = spec.carry()
+        for o in spec.operand_arrays():
+            assert o.dtype == carry.dtype, spec.name
+
+
+@pytest.mark.parametrize("spec", REG, ids=lambda s: s.name)
+def test_guard_accounting_consistent(spec):
+    """``guard`` counts extra ops *inside* step, so the step's jaxpr must
+    contain at least 1 + guard primitives (measured op + guards), and guard
+    stays in the small range the add-baseline subtraction assumes."""
+    assert 0 <= spec.guard <= 3, spec.name
+    with _ctx(spec):
+        jaxpr = jax.make_jaxpr(spec.step)(spec.carry(), *spec.operand_arrays())
+    assert len(jaxpr.eqns) >= 1 + spec.guard, \
+        f"{spec.name}: step has {len(jaxpr.eqns)} primitives but claims " \
+        f"guard={spec.guard} extras on top of the measured op"
+
+
+def test_registry_names_unique_and_categorized():
+    names = [s.name for s in REG]
+    assert len(names) == len(set(names))
+    assert {s.category for s in REG} == set(chains.CATEGORIES)

@@ -1,0 +1,32 @@
+"""Import-only smoke over every file in examples/.
+
+Each example must import cleanly (its module-level code runs; ``main()`` stays
+behind the ``__main__`` guard) and expose a ``main`` entry point. This is the
+regression lock for examples drifting behind API changes: a renamed or
+removed entry point fails here instead of on a user's machine.
+"""
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+EXAMPLES_DIR = pathlib.Path(__file__).resolve().parent.parent / "examples"
+EXAMPLES = sorted(EXAMPLES_DIR.glob("*.py"))
+
+
+def test_examples_dir_discovered():
+    assert len(EXAMPLES) >= 5, EXAMPLES_DIR
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_imports_and_has_main(path):
+    spec = importlib.util.spec_from_file_location(f"_example_{path.stem}", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod
+    try:
+        spec.loader.exec_module(mod)
+    finally:
+        sys.modules.pop(spec.name, None)
+    assert callable(getattr(mod, "main", None)), \
+        f"{path.name} has no main() entry point"

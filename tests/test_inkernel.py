@@ -1,0 +1,182 @@
+"""repro.inkernel: OpSpec -> Pallas fori_loop chain, probe, plan, CLI.
+
+The oracle test is the load-bearing one: for every in-kernel-eligible registry
+row, the Pallas chain (interpret mode) must agree elementwise with the
+host-level straight-line chain — i.e. moving the measurement inside the
+kernel changes *where* the ops run, never *what* they compute.
+"""
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro import inkernel
+from repro.api import KernelChainProbe, Plan, Session, cli, named_plan
+from repro.core import chains
+from repro.core.timing import Timer
+
+REG = chains.default_registry()
+SUPPORTED = inkernel.supported_specs()
+
+
+def _spec(name):
+    return next(s for s in REG if s.name == name)
+
+
+# ------------------------------------------------------------------ factory
+def test_support_policy():
+    names = {s.name for s in SUPPORTED}
+    assert "add" in names and "fma.float32" in names and "popc" in names
+    # 64-bit carries stay on the dispatch path
+    assert "mul64hi" not in names and "add.float64" not in names
+    cats = {s.category for s in SUPPORTED}
+    for cat in ("int_arith", "logic_shift", "fp32", "fp16", "special_math",
+                "int_intrinsic"):
+        assert cat in cats, cat
+
+
+def test_default_tile_dtype_aware():
+    assert inkernel.default_tile("float32") == (8, 128)
+    assert inkernel.default_tile("int32") == (8, 128)
+    assert inkernel.default_tile("bfloat16") == (16, 128)
+    assert inkernel.default_tile("float16") == (16, 128)
+
+
+def test_build_chain_rejects_x64_specs():
+    with pytest.raises(ValueError, match="cannot lower in-kernel"):
+        inkernel.build_chain(_spec("mul64hi"), 4)
+    with pytest.raises(ValueError, match="cannot lower in-kernel"):
+        KernelChainProbe(_spec("add.float64"))
+
+
+@pytest.mark.parametrize("spec", SUPPORTED, ids=lambda s: s.name)
+def test_inkernel_chain_matches_host_oracle(spec):
+    n = 12
+    carry, operands = inkernel.tiles(spec)
+    out = inkernel.build_chain(spec, n, interpret=True)(carry, *operands)
+    oracle = chains.chain_fn(spec, n)(spec.carry(), *spec.operand_arrays())
+    assert out.shape == carry.shape and out.dtype == carry.dtype
+    assert jnp.allclose(out, jnp.full(out.shape, oracle, out.dtype),
+                        rtol=1e-3, atol=1e-3), spec.name
+
+
+def test_measure_inkernel_full_returns_measurement():
+    m = inkernel.measure_inkernel_full(_spec("add"), lens=(2, 8),
+                                       timer=Timer(warmup=0, reps=2))
+    assert m.n == 2 and m.mad_ns >= 0.0
+
+
+# -------------------------------------------------------------------- probe
+def test_probe_identity_and_fidelity_suffix():
+    spec = _spec("add")
+    std = KernelChainProbe(spec)
+    assert std.op == "inkernel.add"
+    assert std.opt_level == "O3"
+    assert std.category == spec.category and std.dtype == spec.dtype
+    assert KernelChainProbe(spec, lens=(4, 32)).op == "inkernel.add.l4-32"
+    assert KernelChainProbe(spec, shape=(8, 256)).op == "inkernel.add.t8x256"
+    assert KernelChainProbe(spec, lens=(4, 32)).logical_key() != std.logical_key()
+
+
+# --------------------------------------------------------------------- plan
+def test_plan_inkernel_pairs_dispatch_probes():
+    plan = Plan.inkernel(ops=("add", "fma.float32"))
+    ops = [p.op for p in plan]
+    assert set(ops) == {"inkernel.add", "inkernel.fma.float32",
+                        "add", "fma.float32"}
+    solo = Plan.inkernel(ops=("add",), dispatch_pair=False)
+    assert [p.op for p in solo] == ["inkernel.add"]
+
+
+def test_named_plan_inkernel_cross_product():
+    plan = named_plan("inkernel")
+    keys = [p.logical_key() for p in plan]
+    assert len(keys) == len(set(keys))
+    cats = {p.category for p in plan}
+    assert {"int_arith", "fp32"} <= cats
+    # one in-kernel + one dispatch probe per eligible spec
+    assert len(plan) == 2 * len(SUPPORTED)
+    # and the full plan embeds the same cross-product
+    assert "inkernel.add" in {p.op for p in named_plan("full")}
+
+
+# ------------------------------------------------------- session + caching
+def test_session_measures_and_caches_kernel_chain(tmp_path):
+    db = tmp_path / "db.json"
+    plan = Plan.inkernel(ops=("add",), lens=(2, 8), dispatch_pair=False)
+    first = Session(db=str(db), timer=Timer(warmup=0, reps=2)).run(plan)
+    assert first.summary().startswith("1 measured")
+    rec = first.measured[0].record
+    assert rec.op == "inkernel.add.l2-8"
+    assert rec.guard == _spec("add").guard
+    assert "fori_loop" in rec.notes
+    second = Session(db=str(db), timer=Timer(warmup=0, reps=2)).run(plan)
+    assert second.summary().startswith("0 measured, 1 cached")
+
+
+def test_guard_netting_uses_inkernel_baseline(monkeypatch, tmp_path):
+    """Guarded in-kernel records net out guard ops against the *in-kernel*
+    add baseline, never the dispatch-level one (which on real hardware can
+    exceed the whole in-kernel latency and clamp net to 0)."""
+    import weakref
+
+    from repro import inkernel as ik
+    from repro.api.probes import KernelChainProbe as KCP
+    from repro.core.timing import Measurement
+
+    def fake_measure(spec, lens=None, shape=None, timer=None, reps=None,
+                     interpret=None):
+        ns = 100.0 if spec.name == "add" else 400.0
+        return Measurement(ns, 0.0, ns, 2)
+
+    monkeypatch.setattr(ik, "measure_inkernel_full", fake_measure)
+    monkeypatch.setattr(KCP, "_baselines", weakref.WeakKeyDictionary())
+
+    def run_one(spec, db):
+        return Session(db=str(tmp_path / db), timer=Timer(warmup=0, reps=2)) \
+            .run(Plan((KernelChainProbe(spec),))).measured[0].record
+
+    rec = run_one(_spec("mul"), "db1.json")  # guard=1, xor-guarded
+    # in-kernel add pair = 100 ns over (1 + guard=1) ops -> baseline 50;
+    # an exact 350 proves the dispatch baseline was never consulted
+    assert rec.latency_ns == 400.0
+    assert rec.net_latency_ns == 350.0
+    rec3 = run_one(_spec("mul24"), "db2.json")  # guard=3
+    assert rec3.net_latency_ns == 250.0  # 400 - 3*50
+    rec0 = run_one(_spec("fma.float32"), "db3.json")  # guard=0: no baseline
+    assert rec0.net_latency_ns == 400.0
+
+
+def test_default_lens_single_source_of_truth():
+    """The unsuffixed cache identity and the measurement default must agree:
+    both resolve to inkernel.INKERNEL_LENS."""
+    spec = _spec("add")
+    assert KernelChainProbe(spec).lens == inkernel.INKERNEL_LENS
+    assert KernelChainProbe(spec).op == "inkernel.add"
+    explicit = KernelChainProbe(spec, lens=inkernel.INKERNEL_LENS)
+    assert explicit.op == "inkernel.add"  # explicit default = same identity
+
+
+# ---------------------------------------------------------------------- CLI
+CLI_OPS = "inkernel.add,add,inkernel.fma.float32,fma.float32"
+
+
+def test_cli_inkernel_plan_and_comparison_table(tmp_path, capsys):
+    db = tmp_path / "db.json"
+    args = ["characterize", "--plan", "inkernel", "--ops", CLI_OPS,
+            "--reps", "2", "--warmup", "0", "--db", str(db)]
+    rc = cli.main(args + ["--table"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "4 measured, 0 cached, 0 failed" in out
+    assert "in-kernel/dispatch" in out  # comparison table rendered
+    assert "| int_arith | add |" in out.replace("  ", " ")
+
+    blob = json.loads(db.read_text())
+    assert {r["op"] for r in blob["records"]} == set(CLI_OPS.split(","))
+
+    # resume: same command is pure cache hits
+    rc = cli.main(args)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 measured, 4 cached, 0 failed" in out

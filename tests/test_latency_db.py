@@ -1,9 +1,10 @@
 """LatencyDB: persistence, queries, report generation (property-based)."""
 import dataclasses
 
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.latency_db import LatencyDB, LatencyRecord
+from repro.core.latency_db import LatencyDB, LatencyRecord, ProbeFailure
 
 rec_st = st.builds(
     LatencyRecord,
@@ -57,6 +58,141 @@ def test_lookup_and_tables():
     assert db.lookup_ns("add", "O3") == 5.0
     md = db.table_markdown()
     assert "add" in md and "Optimized" in md and "Non-Optimized" in md
+
+
+fail_st = st.builds(
+    ProbeFailure,
+    op=st.sampled_from(["boom", "kaput"]),
+    dtype=st.sampled_from(["int32", "float32"]),
+    opt_level=st.sampled_from(["O0", "O3"]),
+    device_kind=st.just("cpu"), backend=st.just("cpu"),
+    jax_version=st.just("0.8.2"),
+    error_type=st.sampled_from(["ValueError", "RuntimeError"]),
+    message=st.text(min_size=1, max_size=30),
+    failed_at=st.text(alphabet="0123456789T:-", max_size=20),
+)
+
+
+@given(st.lists(rec_st, max_size=20), st.lists(fail_st, min_size=1, max_size=5))
+@settings(max_examples=15, deadline=None)
+def test_roundtrip_preserves_failures_and_mad(tmp_path_factory, recs, fails):
+    """Records (incl. mad_ns to full precision) and ProbeFailures both
+    survive a save/load cycle."""
+    db = LatencyDB()
+    db.extend(recs)
+    for f in fails:
+        db.add_failure(f)
+    path = str(tmp_path_factory.mktemp("db") / "lat.json")
+    db.save(path)
+    db2 = LatencyDB(path)
+    assert {(r.key(), r.mad_ns, r.latency_ns) for r in db2.records()} == \
+        {(r.key(), r.mad_ns, r.latency_ns) for r in db.records()}
+    assert {f.key() for f in db2.failures()} == {f.key() for f in db.failures()}
+
+
+def _filled_db(n=4):
+    db = LatencyDB()
+    for i in range(n):
+        db.add(LatencyRecord(op=f"op{i}", category="int_arith", dtype="int32",
+                             opt_level="O3", latency_ns=float(i), mad_ns=0.5,
+                             cycles=float(i), guard=0, net_latency_ns=float(i),
+                             device_kind="cpu", backend="cpu",
+                             jax_version="0.8.2", n_samples=3))
+    db.add_failure(ProbeFailure(op="boom", dtype="int32", opt_level="O3",
+                                device_kind="cpu", backend="cpu",
+                                jax_version="0.8.2", error_type="ValueError",
+                                message="bad", failed_at="t"))
+    return db
+
+
+def test_recover_truncated_db(tmp_path):
+    """A sweep killed mid-save leaves a truncated file: strict load refuses,
+    recover() salvages every complete record."""
+    path = tmp_path / "db.json"
+    db = _filled_db()
+    db.save(str(path))
+    text = path.read_text()
+    path.write_text(text[:text.find('"op3"')])  # last record cut mid-object
+    with pytest.raises(Exception):
+        LatencyDB(str(path))
+    rec = LatencyDB.recover(str(path))
+    assert len(rec) == len(db) - 1
+    assert {r.key() for r in rec.records()} < {r.key() for r in db.records()}
+    # the recovered DB is bound to the path: a save round-trips strictly again
+    rec.save()
+    assert len(LatencyDB(str(path))) == len(rec)
+
+
+def test_recover_skips_partial_objects_without_raising(tmp_path):
+    """A decodable dict missing required fields (e.g. a ProbeFailure cut in
+    half that still parses) is skipped, never re-raised: recover()'s contract
+    is to salvage, not to fail on a second kind of damage."""
+    path = tmp_path / "db.json"
+    _filled_db(n=2).save(str(path))
+    text = path.read_text()
+    # corrupt the file AND plant a well-formed-but-incomplete failure object
+    path.write_text(text[:text.find('"op1"')] +
+                    '{"op": "x", "error_type": "ValueError"} ]')
+    rec = LatencyDB.recover(str(path))
+    assert len(rec) == 1 and rec.failures() == []
+
+
+def test_compare_markdown_pairs_within_one_environment_only():
+    """Regression: dispatch and in-kernel records from different
+    device/backend/jax environments must never be paired into a ratio."""
+    def rec(op, env, ns):
+        return LatencyRecord(op=op, category="int_arith", dtype="int32",
+                             opt_level="O3", latency_ns=ns, mad_ns=0.0,
+                             cycles=ns, guard=0, net_latency_ns=ns,
+                             device_kind=env, backend=env, jax_version="x",
+                             n_samples=2)
+
+    db = LatencyDB()
+    db.add(rec("add", "cpu", 100.0))
+    db.add(rec("inkernel.add", "tpu", 1.0))   # other device: no pair
+    assert db.compare_markdown().count("\n") == 1  # header + separator only
+    db.add(rec("inkernel.add", "cpu", 50.0))  # same env: pairs
+    md = db.compare_markdown()
+    assert "| add | int32 | 100.00±0.00 | 50.00±0.00 | 0.500 |" in md
+
+
+def test_recover_garbage_and_intact_and_missing(tmp_path):
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text('{"records": [{not json')
+    assert len(LatencyDB.recover(str(garbage))) == 0
+
+    intact = tmp_path / "intact.json"
+    _filled_db().save(str(intact))
+    rec = LatencyDB.recover(str(intact))
+    assert len(rec) == 4 and len(rec.failures()) == 1  # identical to strict
+
+    missing = LatencyDB.recover(str(tmp_path / "nope.json"))
+    assert len(missing) == 0 and missing.path.endswith("nope.json")
+
+
+def test_fidelity_keyed_cache_identity_rejects_low_fidelity():
+    """Regression lock (PR 1 cache-identity fix): a low-fidelity variant
+    persists under a suffixed op name, so the standard probe's key can never
+    be satisfied by it — for memory chases and in-kernel chains alike."""
+    from repro.api.probes import KernelChainProbe, MemoryProbe
+    from repro.core import chains
+
+    env = {"device_kind": "cpu", "backend": "cpu", "jax_version": "x"}
+    quick, std = MemoryProbe(8192, steps=(512, 1536)), MemoryProbe(8192)
+    db = LatencyDB()
+    db.add(LatencyRecord(op=quick.op, category="memory", dtype="int32",
+                         opt_level="O3", latency_ns=1.0, mad_ns=0.0, cycles=1.0,
+                         guard=0, net_latency_ns=1.0, n_samples=2, **env))
+    assert quick.key(env) in db
+    assert std.key(env) not in db
+
+    spec = next(o for o in chains.default_registry() if o.name == "add")
+    low, full = KernelChainProbe(spec, lens=(2, 8)), KernelChainProbe(spec)
+    db.add(LatencyRecord(op=low.op, category=spec.category, dtype=spec.dtype,
+                         opt_level="O3", latency_ns=1.0, mad_ns=0.0, cycles=1.0,
+                         guard=1, net_latency_ns=1.0, n_samples=2, **env))
+    assert low.key(env) in db
+    assert full.key(env) not in db
 
 
 def test_version_diff_table():

@@ -63,3 +63,45 @@ def test_calibrated_clock_sane():
     t = Timer()
     hz = t.calibrate_clock_hz()
     assert 1e8 <= hz <= 5e9
+
+
+# ------------------------------------------------------ Measurement algebra
+def test_measurement_sub_mad_quadrature():
+    """Independent-noise subtraction: MADs combine in quadrature, medians and
+    mins subtract, n takes the weaker side."""
+    d = Measurement(100.0, 3.0, 90.0, 10) - Measurement(40.0, 4.0, 35.0, 8)
+    assert d.median_ns == 60.0
+    assert d.mad_ns == pytest.approx(5.0)  # sqrt(3^2 + 4^2)
+    assert d.min_ns == 55.0
+    assert d.n == 8
+
+
+def test_measurement_scaled_scales_dispersion_not_n():
+    s = Measurement(100.0, 8.0, 90.0, 10).scaled(0.25)
+    assert (s.median_ns, s.mad_ns, s.min_ns, s.n) == (25.0, 2.0, 22.5, 10)
+
+
+def test_single_sample_mad_is_zero():
+    m = _summarize([42.0])
+    assert (m.median_ns, m.mad_ns, m.min_ns, m.n) == (42.0, 0.0, 42.0, 1)
+
+
+def test_slope_exact_on_synthetic_linear_cost(monkeypatch):
+    """Virtual clock: fn_by_len(n) costs exactly intercept + slope*n ns, so
+    Timer.slope must recover the slope exactly (intercept cancelled, MAD 0)."""
+    import repro.core.timing as timing
+
+    now = [0]
+    monkeypatch.setattr(timing.time, "perf_counter_ns", lambda: now[0])
+    SLOPE, INTERCEPT = 700, 50_000
+
+    def fn_by_len(n):
+        def fn():
+            now[0] += INTERCEPT + SLOPE * n
+        return fn
+
+    est = Timer(warmup=1, reps=4).slope(fn_by_len, 8, 64)
+    assert est.median_ns == pytest.approx(SLOPE)
+    assert est.min_ns == pytest.approx(SLOPE)
+    assert est.mad_ns == 0.0
+    assert est.n == 4
