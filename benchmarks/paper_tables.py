@@ -8,6 +8,7 @@ Paper artifact -> bench:
   Table IV shared/constant memory analog        -> bench_onchip_memory
   Fig. 3  in-pipeline vs dispatch sampling      -> bench_inkernel_vs_dispatch
   (framework) attention/kernel-path comparison  -> bench_attention_impls
+  (framework) sharded vs serial fan-out scaling -> bench_fanout_scaling
   (deliverable g) roofline table from dry-runs  -> bench_roofline
 """
 from __future__ import annotations
@@ -106,6 +107,41 @@ def bench_memory_hierarchy(timer: Timer, quick: bool = False
                      f"(paper Fig.6 hierarchy cliff)"))
     rows.append(("mem.stream_bandwidth", 0.0, f"{bw:.2f} GB/s"))
     return rows
+
+
+# ------------------------------------------------------- multi-device fan-out
+def bench_fanout_scaling(timer: Timer, quick: bool = False
+                         ) -> list[tuple[str, float, str]]:
+    """Sharded vs serial wall-clock for one plan (docs/fanout.md).
+
+    On a single-device host the two are identical (1 shard); on an N-device
+    host (or under --xla_force_host_platform_device_count) the sharded run
+    should approach serial/N while producing the same record set.
+    """
+    ops = ("add", "mul", "sqrt", "popc") if quick else tuple(
+        o.name for o in chains.default_registry()[:12])
+    plan = Plan.instructions(ops=ops, opt_levels=("O3",))
+    n_dev = len(jax.local_devices())
+
+    t0 = time.perf_counter()
+    serial = Session(timer=timer).run(plan, force=True)
+    t_serial = time.perf_counter() - t0
+
+    fan_session = Session(timer=Timer(warmup=timer.warmup, reps=timer.reps))
+    t0 = time.perf_counter()
+    fanned = fan_session.fan_out(plan, force=True)
+    t_fan = time.perf_counter() - t0
+
+    same = ({r.key() for r in serial.db.records()}
+            == {r.key() for r in fanned.db.records()})
+    dump_json({"devices": n_dev, "probes": len(plan), "serial_s": t_serial,
+               "fanout_s": t_fan, "record_sets_equal": same},
+              f"{RESULTS}/fanout_scaling.json")
+    return [("fanout.serial", t_serial * 1e6, f"{len(plan)} probes, 1 device"),
+            ("fanout.sharded", t_fan * 1e6,
+             f"{len(plan)} probes over {n_dev} device shard(s), "
+             f"speedup={t_serial / max(t_fan, 1e-9):.2f}x, "
+             f"records_equal={same}")]
 
 
 # ---------------------------------------------------------------- Table IV

@@ -3,12 +3,15 @@ characterize this machine's op latencies and memory hierarchy into a
 LatencyDB, then price a model's HLO with the measured table (the
 PPT-GPU-style consumption the paper targets).
 
-  PYTHONPATH=src python examples/characterize.py [--full] [--force]
+  PYTHONPATH=src python examples/characterize.py [--full] [--force] [--shard]
 
 The session is cache-aware: re-running this script is free (every probe is a
 cache hit against the DB), an interrupted run resumes where it stopped, and
-``--force`` re-measures. The same pipeline is available as
-``python -m repro characterize --plan quick|table2|memory|inkernel|full``.
+``--force`` re-measures. ``--shard`` fans the plan out across every local
+device — one device-pinned session per shard, merged into the same DB (see
+docs/fanout.md). The same pipeline is available as
+``python -m repro characterize --plan quick|table2|memory|inkernel|full
+[--shard auto|N]``.
 """
 import argparse
 
@@ -24,6 +27,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="full registry sweep")
     ap.add_argument("--force", action="store_true", help="re-measure cache hits")
+    ap.add_argument("--shard", action="store_true",
+                    help="fan the plan out across all local devices")
     ap.add_argument("--db", default="/tmp/latency_db.json")
     args = ap.parse_args()
 
@@ -31,7 +36,11 @@ def main() -> None:
     # DB-backed cache; one Plan declares the whole sweep.
     session = Session(db=args.db, timer=Timer(warmup=2, reps=20))
     plan = named_plan("full") if args.full else named_plan("quick")
-    result = session.run(plan, force=args.force)
+    if args.shard:
+        print(f"fan-out over {len(jax.local_devices())} device(s)")
+        result = session.fan_out(plan, force=args.force)
+    else:
+        result = session.run(plan, force=args.force)
     print(f"\nplan '{plan.name}': {result.summary()}")
     for r in result.failed:
         print(f"  FAILED {r.failure.op}@{r.failure.opt_level}: "

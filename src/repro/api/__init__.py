@@ -10,10 +10,13 @@ that pipeline as an API:
 * :class:`Session` — owns the Timer, environment fingerprint and
   LatencyDB-backed cache; executes plans incrementally (cache hits skipped,
   partial results flushed after every probe, errors recorded as structured
-  failures).
+  failures). Pin one with ``Session(device=...)``, or shard a plan across
+  every local device with :meth:`Session.fan_out` (one pinned session per
+  device, per-shard DBs merged — see docs/fanout.md).
 * :class:`ResultSet` — per-probe outcomes plus report helpers.
 
-CLI: ``python -m repro characterize --plan quick|table2|memory|inkernel|full``.
+CLI: ``python -m repro characterize --plan quick|table2|memory|inkernel|full
+[--shard auto|N]``.
 The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
 ``membench.sweep``) are deprecation shims over this package.
 """

@@ -7,11 +7,20 @@ Examples::
     python -m repro characterize --plan full --db /tmp/db.json --force
     python -m repro characterize --plan table2 --ops add,mul --table
     python -m repro characterize --plan inkernel --table   # in-pipeline probes
+    python -m repro characterize --plan full --shard auto  # one shard per device
+    python -m repro characterize --plan table2 --shard 4   # first 4 devices
 
 Scheduling is cache-aware by default: probes already in the DB for this
 (device, backend, jax version) are reported as cache hits and skipped, which
 is also what makes interrupted sweeps resumable — partial results are flushed
 after every probe, so re-running the same command picks up where it stopped.
+
+``--shard`` fans the plan out across local devices (``auto`` = all of them):
+one device-pinned Session per shard, probes sequential within each device so
+timing never contends, per-shard results merged into one DB (see
+docs/fanout.md). Full-registry sweeps then scale with the device count —
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` simulates N devices
+on a CPU-only host.
 """
 from __future__ import annotations
 
@@ -54,11 +63,41 @@ def build_parser() -> argparse.ArgumentParser:
     ch.add_argument("--recover", action="store_true",
                     help="salvage complete records from a truncated/corrupt "
                          "DB file instead of refusing to load it")
+    ch.add_argument("--shard", default=None, metavar="auto|N",
+                    help="fan the plan out across local devices: 'auto' uses "
+                         "every device, N pins the first N (probes stay "
+                         "sequential within each device)")
     ch.add_argument("--warmup", type=int, default=2)
     ch.add_argument("--reps", type=int, default=10,
                     help="timed repetitions per measurement point")
     ch.set_defaults(func=cmd_characterize)
     return ap
+
+
+def _shard_devices(shard: str | None):
+    """Resolve ``--shard`` to a device list, None (no fan-out), or an exit code."""
+    if shard is None:
+        return None
+    import jax
+
+    devices = jax.local_devices()
+    if shard == "auto":
+        n = len(devices)
+    else:
+        try:
+            n = int(shard)
+        except ValueError:
+            print(f"error: --shard must be 'auto' or a positive integer, "
+                  f"got {shard!r}", file=sys.stderr)
+            return 2
+        if n < 1:
+            print("error: --shard must be >= 1", file=sys.stderr)
+            return 2
+        if n > len(devices):
+            print(f"note: --shard {n} clamped to the {len(devices)} local "
+                  "device(s)", file=sys.stderr)
+            n = len(devices)
+    return devices[:n]
 
 
 def cmd_characterize(args: argparse.Namespace) -> int:
@@ -85,10 +124,18 @@ def cmd_characterize(args: argparse.Namespace) -> int:
         print(f"error: could not load DB {args.db}: {type(e).__name__}: {e} "
               "(pass --recover to salvage complete records)", file=sys.stderr)
         return 2
+    devices = _shard_devices(args.shard)
+    if isinstance(devices, int):  # parse/validation error code
+        return devices
     print(f"plan '{plan.name}': {len(plan)} probes -> {args.db} "
           f"[{session.env['backend']}/{session.env['device_kind']}, "
           f"jax {session.env['jax_version']}]")
-    result = session.run(plan, force=args.force)
+    if devices is not None:
+        print(f"fan-out: {len(devices)} device shard(s): "
+              + ", ".join(str(d) for d in devices))
+        result = session.fan_out(plan, devices=devices, force=args.force)
+    else:
+        result = session.run(plan, force=args.force)
 
     print(f"plan '{plan.name}': {result.summary()}")
     if result.cached and not result.measured and not result.failed:

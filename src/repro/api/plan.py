@@ -39,7 +39,7 @@ class Plan:
     # ------------------------------------------------------------- algebra
     def __add__(self, other: "Plan") -> "Plan":
         return Plan(_dedupe(self.probes + other.probes),
-                    name=f"{self.name}+{other.name}")
+                    name=_compose_name(self.name, other.name))
 
     def __len__(self) -> int:
         return len(self.probes)
@@ -53,16 +53,39 @@ class Plan:
     def filter(self, ops: Iterable[str] | None = None,
                opt_levels: Iterable[str] | None = None,
                categories: Iterable[str] | None = None) -> "Plan":
-        """Keep only probes matching every given axis (None = keep all)."""
+        """Keep only probes matching every given axis (None = keep all).
+
+        The op axis matches any of a probe's :meth:`Probe.match_names` — the
+        full derived name *or* its base row — so ``ops=["add"]`` keeps an
+        inkernel plan's ``inkernel.add`` and ``ops=["mem.chase.ws8192"]``
+        keeps the fidelity-suffixed ``mem.chase.ws8192.s512-1536``.
+        """
         ops = set(ops) if ops is not None else None
         opt_levels = set(opt_levels) if opt_levels is not None else None
         categories = set(categories) if categories is not None else None
         kept = tuple(
             p for p in self.probes
-            if (ops is None or p.op in ops)
+            if (ops is None or not ops.isdisjoint(p.match_names()))
             and (opt_levels is None or p.opt_level in opt_levels)
             and (categories is None or p.category in categories))
         return dataclasses.replace(self, probes=kept)
+
+    def shard(self, n: int) -> "list[Plan]":
+        """Partition into ``n`` balanced sub-plans for multi-device fan-out.
+
+        Probes are dealt round-robin (``probes[i::n]``) so expensive probe
+        families — the long memory ladder, the O0 rows — spread across shards
+        instead of landing on one device. The shards are disjoint, cover the
+        deduped plan exactly, and keep the parent's relative order; running
+        them all equals running the plan serially (same record set). Empty
+        shards are returned when ``n > len(plan)`` so the caller's zip with
+        a device list stays aligned.
+        """
+        if n < 1:
+            raise ValueError(f"shard count must be >= 1, got {n}")
+        probes = _dedupe(self.probes)
+        return [Plan(probes[i::n], name=f"{self.name}[shard {i + 1}/{n}]")
+                for i in range(n)]
 
     # ------------------------------------------------------------ builders
     @staticmethod
@@ -124,6 +147,25 @@ class Plan:
         if dispatch_pair:
             probes += [InstructionProbe(s, "O3") for s in specs]
         return Plan(_dedupe(tuple(probes)), name="inkernel")
+
+
+def _compose_name(a: str, b: str, max_parts: int = 3) -> str:
+    """Name for ``a + b``: deduped '+'-join, capped so long compositions stay
+    readable in log lines and probe labels (``quick+memory+kernels+2more``)
+    instead of growing unboundedly with every ``+``."""
+    parts: list[str] = []
+    overflow = 0  # names already folded into a previous cap's "Nmore" tail
+    for part in (*a.split("+"), *b.split("+")):
+        if part.endswith("more") and part[:-4].isdigit():
+            overflow += int(part[:-4])
+        elif part and part not in parts:
+            parts.append(part)
+    if len(parts) > max_parts:
+        overflow += len(parts) - max_parts
+        parts = parts[:max_parts]
+    if overflow:
+        parts.append(f"{overflow}more")
+    return "+".join(parts) or "plan"
 
 
 def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Callable, Mapping
+from typing import Any, Callable, Mapping
 
 from repro.core import measure, membench
 from repro.core.chains import OpSpec
@@ -45,6 +45,7 @@ class ProbeContext:
     env: Mapping[str, str]              # device_kind / backend / jax_version
     clock_hz: float
     baseline_ns: Callable[[str], float]  # per-level 1-cycle-class baseline
+    device: Any = None                   # session's pinned jax device (None = default)
 
 
 class Probe:
@@ -67,6 +68,18 @@ class Probe:
     def logical_key(self) -> tuple[str, str, str]:
         """Environment-independent identity, used for plan dedupe."""
         return (self.op, self.opt_level, self.dtype)
+
+    def match_names(self) -> frozenset[str]:
+        """Every name an op filter may address this probe by.
+
+        Always contains the full derived ``op``; subclasses whose op names are
+        derived from a base row (``inkernel.add`` from ``add``, fidelity
+        suffixes like ``mem.chase.ws8192.s512-1536``) also answer to the base
+        forms, so ``Plan.filter(ops=["add"])`` keeps a plan's ``inkernel.add``
+        instead of silently dropping it. Exact-by-construction: ``add`` never
+        matches the distinct registry row ``add.bfloat16``.
+        """
+        return frozenset((self.op,))
 
     def key(self, env: Mapping[str, str]) -> tuple:
         """Full cache key; identical layout to ``LatencyRecord.key()``."""
@@ -152,9 +165,13 @@ class MemoryProbe(Probe):
         self.working_set_bytes = int(working_set_bytes)
         self.line_bytes = line_bytes
         self.steps = tuple(steps)
-        self.op = f"mem.chase.ws{self.working_set_bytes}"
+        self.base_op = f"mem.chase.ws{self.working_set_bytes}"
+        self.op = self.base_op
         if self.steps != self.DEFAULT_STEPS:
             self.op += f".s{self.steps[0]}-{self.steps[1]}"
+
+    def match_names(self) -> frozenset[str]:
+        return frozenset((self.op, self.base_op))
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
         pt = membench.measure_latency(self.working_set_bytes,
@@ -188,11 +205,15 @@ class KernelProbe(Probe):
         self.reps = reps
         # non-default chain lengths / tile are a different experiment: make
         # them part of the cache identity, like MemoryProbe.steps
-        self.op = f"kernel.alu_chain.{kernel_op}"
+        self.base_op = f"kernel.alu_chain.{kernel_op}"
+        self.op = self.base_op
         if self.lens != self.DEFAULT_LENS:
             self.op += f".l{self.lens[0]}-{self.lens[1]}"
         if self.shape != self.DEFAULT_SHAPE:
             self.op += f".t{self.shape[0]}x{self.shape[1]}"
+
+    def match_names(self) -> frozenset[str]:
+        return frozenset((self.op, self.base_op, self.kernel_op))
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
         import jax.numpy as jnp
@@ -248,11 +269,17 @@ class KernelChainProbe(Probe):
         self.opt_level = "O3"
         self.dtype = spec.dtype
         self.category = spec.category
-        self.op = f"inkernel.{spec.name}"
+        self.base_op = f"inkernel.{spec.name}"
+        self.op = self.base_op
         if self.lens != tuple(inkernel.INKERNEL_LENS):
             self.op += f".l{self.lens[0]}-{self.lens[1]}"
         if self.shape is not None:
             self.op += f".t{self.shape[0]}x{self.shape[1]}"
+
+    def match_names(self) -> frozenset[str]:
+        # addressable by the full derived name, the unsuffixed in-kernel name,
+        # and the dispatch-side base row (``--ops add`` keeps ``inkernel.add``)
+        return frozenset((self.op, self.base_op, self.spec.name))
 
     def _inkernel_baseline_ns(self, ctx: ProbeContext) -> float:
         """In-kernel 1-cycle-class baseline: the ``add`` spec's (add ^ xor)

@@ -14,6 +14,13 @@ executes :class:`Plan`\\ s **incrementally**:
   of vanishing into a log line. ``KeyboardInterrupt`` is *not* swallowed —
   partial results are already on disk.
 
+A session may be **pinned to one device** (``Session(device=...)``): the
+environment fingerprint, the timer, the guard baseline and every probe
+execution then derive from that device instead of the process default.
+:meth:`Session.fan_out` builds on this to shard a plan across all local
+devices — one pinned session per device, probes sequential within each
+(timing must not contend), per-shard DBs merged on completion.
+
 Typical use::
 
     from repro.api import Plan, Session
@@ -23,10 +30,17 @@ Typical use::
                          + Plan.memory())
     print(result.summary())
     print(result.table_markdown())
+
+    # multi-device: same records, wall-clock / n_devices
+    result = session.fan_out(Plan.instructions())
 """
 from __future__ import annotations
 
+import concurrent.futures
+import contextlib
 import dataclasses
+
+import jax
 
 from repro.core import chains, measure
 from repro.core.latency_db import (LatencyDB, LatencyRecord, ProbeFailure,
@@ -90,15 +104,43 @@ class Session:
         first flush), or None for an in-memory DB.
     timer: shared :class:`Timer`; defaults to the standard calibration.
     force: re-measure cache hits by default (per-run ``force`` overrides).
+    device: pin the session to one jax device (a ``jax.Device`` or an index
+        into ``jax.devices()``). The environment fingerprint, every probe
+        execution, the timer and the guard baseline all derive from *this*
+        device; ``None`` keeps the process default (single-device behavior).
     """
 
     def __init__(self, db: LatencyDB | str | None = None,
-                 timer: Timer | None = None, force: bool = False):
+                 timer: Timer | None = None, force: bool = False,
+                 device=None):
+        if isinstance(device, int):
+            device = jax.devices()[device]
+        self.device = device
         self.db = db if isinstance(db, LatencyDB) else LatencyDB(path=db)
         self.timer = timer or Timer()
+        if self.device is not None:
+            if self.timer.device is None:
+                self.timer.device = self.device
+            elif self.timer.device != self.device:
+                # a timer calibrated/pinned on another device would silently
+                # override this session's pin inside time_callable
+                raise ValueError(
+                    f"timer is pinned to {self.timer.device}, session to "
+                    f"{self.device}; give each pinned session its own timer")
         self.force = force
-        self.env = current_environment()
-        self._baseline: dict[tuple[str, bool], float] = {}
+        self.env = current_environment(device)
+        self._baseline: dict[tuple, float] = {}
+
+    def _device_ctx(self):
+        """Scope in which all of this session's jax work runs."""
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
+
+    def _device_token(self):
+        """Hashable identity of the pinned device for in-session caches."""
+        return None if self.device is None else (self.env["backend"],
+                                                 self.device.id)
 
     # ------------------------------------------------------------- baseline
     def baseline_ns(self, opt_level: str, use_db: bool = True) -> float:
@@ -108,9 +150,11 @@ class Session:
         baseline = measured_pair / (1 + guard). Derived from the DB when the
         pair is already cached (and ``use_db``); measured (and cached
         in-session) otherwise. Forced runs pass ``use_db=False`` so a stale
-        cached baseline is never mixed into fresh measurements.
+        cached baseline is never mixed into fresh measurements. The cache is
+        partitioned by the pinned device: fan-out shards must never share a
+        baseline measured on a different device.
         """
-        cache_key = (opt_level, use_db)
+        cache_key = (self._device_token(), opt_level, use_db)
         if cache_key not in self._baseline:
             base = next((o for o in chains.default_registry()
                          if o.name == "add"), None)
@@ -120,8 +164,11 @@ class Session:
                 rec = self.db.get((self.env["device_kind"], self.env["backend"],
                                    self.env["jax_version"], opt_level,
                                    base.name, base.dtype)) if use_db else None
-                ns = rec.latency_ns if rec is not None else measure.measure_op(
-                    base, opt_level, self.timer)
+                if rec is not None:
+                    ns = rec.latency_ns
+                else:
+                    with self._device_ctx():
+                        ns = measure.measure_op(base, opt_level, self.timer)
                 self._baseline[cache_key] = ns / (1 + base.guard)
         return self._baseline[cache_key]
 
@@ -129,7 +176,8 @@ class Session:
         return ProbeContext(timer=self.timer, env=self.env,
                             clock_hz=self.timer.calibrate_clock_hz(),
                             baseline_ns=lambda lv: self.baseline_ns(
-                                lv, use_db=not force))
+                                lv, use_db=not force),
+                            device=self.device)
 
     # ------------------------------------------------------------ execution
     def run(self, plan: Plan, force: bool | None = None) -> ResultSet:
@@ -150,7 +198,8 @@ class Session:
                 logger.debug("cached   %-28s", probe.op + "@" + probe.opt_level)
                 continue
             try:
-                rec = probe.run(ctx)
+                with self._device_ctx():
+                    rec = probe.run(ctx)
             except Exception as e:  # noqa: BLE001 - recorded as structured failure
                 failure = ProbeFailure(
                     op=probe.op, dtype=probe.dtype, opt_level=probe.opt_level,
@@ -172,3 +221,50 @@ class Session:
     def _flush(self) -> None:
         if self.db.path:
             self.db.save()
+
+    # -------------------------------------------------------------- fan-out
+    def fan_out(self, plan: Plan, devices=None, force: bool | None = None
+                ) -> ResultSet:
+        """Shard ``plan`` across devices; one pinned Session per device.
+
+        The plan is dealt round-robin over ``devices`` (default: all of
+        ``jax.local_devices()``) via :meth:`Plan.shard`; each shard runs in
+        its own thread through a device-pinned Session. Probes stay
+        sequential *within* a device — timing probes must not contend for
+        the hardware they are measuring — so wall-clock scales with the
+        device count while each measurement still sees an idle device.
+
+        Every shard flushes to this session's DB path (safe: ``save`` is an
+        atomic read-merge-write), and on completion the shard DBs are merged
+        into ``self.db`` under :meth:`LatencyDB.merge` rules. Returns one
+        :class:`ResultSet` with all shard outcomes in shard order.
+        """
+        devices = list(devices) if devices is not None else jax.local_devices()
+        if not devices:
+            raise ValueError("fan_out needs at least one device")
+        force = self.force if force is None else force
+        plan = plan.dedupe()
+        shards = plan.shard(len(devices))
+        # calibrate once, serially: the spin-loop calibration under N
+        # concurrent shard threads would be GIL-inflated ~N-fold, skewing
+        # every record's cycles field versus a serial run
+        clock_hz = self.timer.calibrate_clock_hz()
+        sessions = [
+            Session(db=LatencyDB(path=self.db.path),
+                    timer=Timer(warmup=self.timer.warmup, reps=self.timer.reps,
+                                clock_hz=clock_hz, device=dev),
+                    force=force, device=dev)
+            for dev in devices]
+        logger.info("fan-out: plan '%s' (%d probes) over %d device(s)",
+                    plan.name, len(plan), len(devices))
+        with concurrent.futures.ThreadPoolExecutor(
+                max_workers=len(devices),
+                thread_name_prefix="repro-shard") as pool:
+            futures = [pool.submit(sess.run, shard, force)
+                       for sess, shard in zip(sessions, shards) if len(shard)]
+            shard_results = [f.result() for f in futures]
+        self.db.merge(*(sess.db for sess in sessions))
+        self._flush()
+        return ResultSet(
+            results=[r for rs in shard_results for r in rs.results],
+            db=self.db)

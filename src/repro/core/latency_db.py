@@ -6,10 +6,16 @@ DB — that is how the paper's Table III (CUDA 9.0 vs 10.0) diff is produced.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
 from typing import Iterable
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX host
+    fcntl = None
 
 import jax
 
@@ -62,8 +68,15 @@ class ProbeFailure:
                 self.opt_level, self.op, self.dtype)
 
 
-def current_environment() -> dict[str, str]:
-    dev = jax.devices()[0]
+def current_environment(device=None) -> dict[str, str]:
+    """Environment fingerprint for ``device`` (default: the first device).
+
+    The fingerprint is what every record/cache key starts with, so a session
+    pinned to ``jax.devices()[3]`` must fingerprint *that* device — deriving
+    it from ``jax.devices()[0]`` regardless of target was the root cause of
+    mis-keyed records on multi-device hosts.
+    """
+    dev = device if device is not None else jax.devices()[0]
     return {
         "device_kind": dev.device_kind,
         "backend": dev.platform,
@@ -71,11 +84,34 @@ def current_environment() -> dict[str, str]:
     }
 
 
+@contextlib.contextmanager
+def _flush_lock(path: str):
+    """Inter-process lock serializing read-merge-write cycles on one DB path.
+
+    Uses ``flock`` on a sidecar ``<path>.lock`` file so two sessions flushing
+    to the same DB never interleave their read-merge-write critical sections
+    (the rename itself is atomic, but without the lock both could read the
+    same stale state and the second rename would drop the first's records).
+    No-op where ``fcntl`` is unavailable.
+    """
+    if fcntl is None:  # non-POSIX: atomic rename still holds, merge races don't
+        yield
+        return
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    with open(path + ".lock", "a") as lockf:
+        fcntl.flock(lockf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lockf, fcntl.LOCK_UN)
+
+
 class LatencyDB:
     def __init__(self, path: str | None = None):
         self.path = path
         self._records: dict[tuple, LatencyRecord] = {}
         self._failures: dict[tuple, ProbeFailure] = {}
+        self._disk_state: tuple | None = None
         if path and os.path.exists(path):
             self.load(path)
 
@@ -121,15 +157,78 @@ class LatencyDB:
             return default
         return sorted(recs, key=lambda r: r.measured_at)[-1].latency_ns
 
+    # ---------------------------------------------------------------- merge
+    def merge(self, *others: "LatencyDB") -> "LatencyDB":
+        """Merge other DBs into this one (in place); returns self.
+
+        Conflict rules, applied per key:
+
+        * record vs record — newest ``measured_at`` wins; ties keep the
+          current value (so a just-measured in-memory record is never
+          replaced by an equally-timestamped on-disk copy of itself);
+        * failure vs failure — newest ``failed_at`` wins, same tie rule;
+        * record vs failure — the success supersedes the failure regardless
+          of timestamps: one shard measuring an op beats another shard's
+          crash on it.
+        """
+        for other in others:
+            for key, rec in other._records.items():
+                mine = self._records.get(key)
+                if mine is None or rec.measured_at > mine.measured_at:
+                    self._records[key] = rec
+            for key, fail in other._failures.items():
+                mine = self._failures.get(key)
+                if mine is None or fail.failed_at > mine.failed_at:
+                    self._failures[key] = fail
+        for key in list(self._failures):
+            if key in self._records:
+                del self._failures[key]
+        return self
+
     # ------------------------------------------------------------------- IO
-    def save(self, path: str | None = None) -> str:
+    def save(self, path: str | None = None, merge_on_disk: bool = True) -> str:
+        """Flush to ``path``: read-merge the on-disk state, then write atomically.
+
+        Concurrent writers (sharded sessions flushing to one DB) are safe:
+        the read-merge-write cycle runs under an inter-process lock, the
+        merge keeps every other writer's records (:meth:`merge` rules), and
+        the write is a unique-temp-file + rename, so an interrupted save
+        leaves the previous file intact rather than a truncated one.
+        ``merge_on_disk=False`` restores plain overwrite semantics (still
+        atomic) for callers that want the file to mirror memory exactly.
+        """
         path = path or self.path
         assert path, "no path for LatencyDB.save"
-        dump_json({"saved_at": timestamp(),
-                   "records": [dataclasses.asdict(r) for r in self._records.values()],
-                   "failures": [dataclasses.asdict(f) for f in self._failures.values()]},
-                  path)
+        with _flush_lock(path):
+            if merge_on_disk and os.path.exists(path) and not self._disk_unchanged(path):
+                try:
+                    disk = LatencyDB(path)
+                except Exception:  # noqa: BLE001 - salvage, never clobber, a corrupt file
+                    disk = LatencyDB.recover(path)
+                self.merge(disk)
+            dump_json({"saved_at": timestamp(),
+                       "records": [dataclasses.asdict(r) for r in self._records.values()],
+                       "failures": [dataclasses.asdict(f) for f in self._failures.values()]},
+                      path)
+            self._remember_disk_state(path)
         return path
+
+    def _disk_unchanged(self, path: str) -> bool:
+        """True when ``path`` still holds exactly what we last wrote/read —
+        lets per-probe flushes of long sweeps skip re-parsing their own
+        output. Checked under the flush lock."""
+        try:
+            st = os.stat(path)
+        except OSError:
+            return False
+        return self._disk_state == (path, st.st_mtime_ns, st.st_size)
+
+    def _remember_disk_state(self, path: str) -> None:
+        try:
+            st = os.stat(path)
+            self._disk_state = (path, st.st_mtime_ns, st.st_size)
+        except OSError:
+            self._disk_state = None
 
     def load(self, path: str) -> None:
         blob = load_json(path)
@@ -137,6 +236,7 @@ class LatencyDB:
             self.add(LatencyRecord(**raw))
         for raw in blob.get("failures", ()):  # absent in pre-1.1 DB files
             self.add_failure(ProbeFailure(**raw))
+        self._remember_disk_state(path)
 
     @classmethod
     def recover(cls, path: str) -> "LatencyDB":

@@ -18,6 +18,7 @@ timers are noisy in a way ``%clock`` is not.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import statistics
 import time
@@ -66,13 +67,24 @@ class Timer:
     clock_hz: nominal device clock used to convert ns -> cycles, so tables can
         be reported in cycles like the paper's. Defaults to a calibrated
         estimate of the host clock (see ``calibrate_clock_hz``).
+    device: pin every timed/warmed execution (and the compilations they
+        trigger) to this jax device via ``jax.default_device``. ``None``
+        keeps jax's process default — the pre-multi-device behavior.
     """
 
-    def __init__(self, warmup: int = 3, reps: int = 30, clock_hz: float | None = None):
+    def __init__(self, warmup: int = 3, reps: int = 30, clock_hz: float | None = None,
+                 device: Any | None = None):
         self.warmup = int(warmup)
         self.reps = int(reps)
         self.clock_hz = clock_hz
+        self.device = device
         self._null_cache: dict[Any, Measurement] = {}
+
+    def device_ctx(self):
+        """``jax.default_device`` scope for the pinned device (no-op if unpinned)."""
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
 
     # ------------------------------------------------------------------ raw
     def time_callable(self, fn: Callable[..., Any], *args: Any,
@@ -80,13 +92,14 @@ class Timer:
         """Median wall time of ``fn(*args)`` with device completion."""
         warmup = self.warmup if warmup is None else warmup
         reps = self.reps if reps is None else reps
-        for _ in range(warmup):
-            block(fn(*args))
-        samples = []
-        for _ in range(reps):
-            t0 = time.perf_counter_ns()
-            block(fn(*args))
-            samples.append(time.perf_counter_ns() - t0)
+        with self.device_ctx():
+            for _ in range(warmup):
+                block(fn(*args))
+            samples = []
+            for _ in range(reps):
+                t0 = time.perf_counter_ns()
+                block(fn(*args))
+                samples.append(time.perf_counter_ns() - t0)
         return _summarize(samples)
 
     # ----------------------------------------------------------- calibration
@@ -96,11 +109,13 @@ class Timer:
 
         ``make_null`` builds a region with the *same* dispatch path as the
         measured region but zero timed work (e.g. jitted identity on the chain
-        carry). Cached per ``key``.
+        carry). Cached per ``(key, pinned device)`` — a calibration taken on
+        one device must never satisfy a lookup after re-pinning to another.
         """
-        if key not in self._null_cache:
-            self._null_cache[key] = self.time_callable(make_null(), *args)
-        return self._null_cache[key]
+        cache_key = (key, self.device)
+        if cache_key not in self._null_cache:
+            self._null_cache[cache_key] = self.time_callable(make_null(), *args)
+        return self._null_cache[cache_key]
 
     # --------------------------------------------------------------- methods
     def sandwich(self, fn: Callable[..., Any], null_fn: Callable[..., Any],

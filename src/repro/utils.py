@@ -1,10 +1,12 @@
 """Small shared utilities used across the framework."""
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import logging
 import os
+import tempfile
 import time
 from typing import Any, Iterable, Mapping
 
@@ -78,11 +80,32 @@ class _JsonEncoder(json.JSONEncoder):
 
 
 def dump_json(obj: Any, path: str) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(obj, f, indent=2, cls=_JsonEncoder)
-    os.replace(tmp, path)
+    """Atomically serialize ``obj`` to ``path``.
+
+    The temp file is uniquely named (two concurrent writers never share one)
+    and renamed over the target only after a successful write + fsync, so a
+    crash mid-write leaves the previous file intact and no truncated JSON is
+    ever observable at ``path``.
+    """
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                               prefix=os.path.basename(path) + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=2, cls=_JsonEncoder)
+            f.flush()
+            os.fsync(f.fileno())
+        # mkstemp creates 0600; restore the umask-derived mode a plain
+        # open() would have produced so saved DBs stay readable by others
+        umask = os.umask(0)
+        os.umask(umask)
+        os.chmod(tmp, 0o666 & ~umask)
+        os.replace(tmp, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
 
 
 def load_json(path: str) -> Any:

@@ -1,0 +1,304 @@
+"""Multi-device fan-out: device-pinned sessions, Plan.shard, Session.fan_out,
+concurrent-flush safety, and the --shard CLI.
+
+Fast tests use fake probes / fake devices in-process (conftest keeps the
+process at 1 real device on purpose); end-to-end multi-device coverage runs
+in subprocesses with ``--xla_force_host_platform_device_count`` (slow tier).
+"""
+import json
+import threading
+
+import pytest
+
+from repro.api import Plan, Session
+from repro.api.plan import _compose_name, named_plan
+from repro.core.latency_db import LatencyDB, current_environment
+from repro.core.timing import Measurement, Timer
+from tests._subproc import run_with_devices
+
+
+class FakeProbe:
+    """Deterministic probe (no jax work) for scheduler-level tests."""
+
+    category = "test"
+    dtype = "float32"
+
+    def __init__(self, op, opt_level="O3", runs=None):
+        self.op = op
+        self.opt_level = opt_level
+        self.runs = runs if runs is not None else {}
+
+    def logical_key(self):
+        return (self.op, self.opt_level, self.dtype)
+
+    def match_names(self):
+        return frozenset((self.op,))
+
+    def key(self, env):
+        return (env["device_kind"], env["backend"], env["jax_version"],
+                self.opt_level, self.op, self.dtype)
+
+    def run(self, ctx):
+        self.runs[self.op] = self.runs.get(self.op, 0) + 1
+        from repro.api.probes import Probe
+
+        return Probe._record(self, ctx, Measurement(10.0, 1.0, 9.0, 3))
+
+
+def _plan(ops, runs=None):
+    return Plan(tuple(FakeProbe(op, runs=runs) for op in ops))
+
+
+# --------------------------------------------------------------- Plan.shard
+def test_shard_partitions_disjoint_and_complete():
+    plan = named_plan("table2")
+    for n in (1, 2, 3, 7):
+        shards = plan.shard(n)
+        assert len(shards) == n
+        keys = [p.logical_key() for s in shards for p in s]
+        assert sorted(keys) == sorted(p.logical_key() for p in plan.dedupe())
+        assert len(keys) == len(set(keys))  # disjoint
+        sizes = [len(s) for s in shards]
+        assert max(sizes) - min(sizes) <= 1  # balanced round-robin
+
+
+def test_shard_more_shards_than_probes_and_bad_n():
+    plan = _plan(["a", "b"])
+    shards = plan.shard(5)
+    assert [len(s) for s in shards] == [1, 1, 0, 0, 0]
+    with pytest.raises(ValueError):
+        plan.shard(0)
+
+
+def test_shard_names_mention_parent():
+    s = named_plan("quick").shard(2)
+    assert s[0].name == "quick[shard 1/2]"
+    assert s[1].name == "quick[shard 2/2]"
+
+
+# --------------------------------------------------- composed-name capping
+def test_plan_add_name_is_capped():
+    plans = [Plan((FakeProbe(f"op{i}"),), name=f"plan{i}") for i in range(8)]
+    total = plans[0]
+    for p in plans[1:]:
+        total = total + p
+    assert total.name == "plan0+plan1+plan2+5more"
+    assert len(total) == 8  # probes themselves are never dropped
+    # re-adding an already-named component neither grows nor duplicates
+    assert (total + plans[0]).name == total.name
+    assert _compose_name("a+b", "b+c") == "a+b+c"
+
+
+# ------------------------------------------------- filter by base-row name
+def test_filter_matches_derived_op_names():
+    plan = named_plan("inkernel").filter(ops=["add"])
+    assert {p.op for p in plan} == {"inkernel.add", "add"}
+    # the pre-fix behavior silently produced an empty plan here
+    assert len(named_plan("inkernel").filter(ops=["add", "mul"])) == 4
+
+
+def test_filter_base_row_is_exact_not_prefix():
+    # "add" must not sweep in the distinct registry row "add.bfloat16"
+    plan = Plan.instructions(opt_levels=("O3",)).filter(ops=["add"])
+    assert {p.op for p in plan} == {"add"}
+
+
+def test_filter_matches_fidelity_suffixed_memory_probe():
+    from repro.api.probes import MemoryProbe
+
+    quick = Plan((MemoryProbe(8192, steps=(512, 1536)),))
+    assert len(quick.filter(ops=["mem.chase.ws8192"])) == 1
+    assert len(quick.filter(ops=["mem.chase.ws8192.s512-1536"])) == 1
+    assert len(quick.filter(ops=["mem.chase.ws4096"])) == 0
+
+
+# --------------------------------------------------------- device pinning
+def test_current_environment_derives_from_explicit_device():
+    class Dev:
+        device_kind = "FakeTPU v9"
+        platform = "tpu"
+
+    env = current_environment(Dev())
+    assert env["device_kind"] == "FakeTPU v9"
+    assert env["backend"] == "tpu"
+    # default stays the process-default device
+    assert current_environment()["backend"] in ("cpu", "tpu", "gpu")
+
+
+def test_session_accepts_device_index_and_pins_timer():
+    import jax
+
+    session = Session(device=0, timer=Timer(warmup=0, reps=1))
+    assert session.device == jax.devices()[0]
+    assert session.timer.device == jax.devices()[0]
+    assert session.env == current_environment(jax.devices()[0])
+
+
+def test_session_rejects_timer_pinned_elsewhere():
+    """A shared timer pinned to another device would silently override the
+    session's pin inside time_callable — refuse the mismatch loudly."""
+    import jax
+
+    t = Timer(warmup=0, reps=1)
+    Session(device=0, timer=t)          # pins the fresh timer
+    assert t.device == jax.devices()[0]
+    Session(device=0, timer=t)          # same pin: fine
+
+    class OtherDev:  # stands in for a second device (process only has one)
+        device_kind = "cpu"
+        platform = "cpu"
+        id = 99
+
+    with pytest.raises(ValueError, match="pinned"):
+        Session(device=OtherDev(), timer=t)
+
+
+def test_saved_db_not_owner_only(tmp_path):
+    """dump_json's unique temp file must not leak mkstemp's 0600 mode onto
+    the flushed DB (umask-derived mode, like a plain open())."""
+    import os
+    import stat
+
+    db = LatencyDB(str(tmp_path / "db.json"))
+    db.save()
+    mode = stat.S_IMODE(os.stat(db.path).st_mode)
+    umask = os.umask(0)
+    os.umask(umask)
+    assert mode == (0o666 & ~umask)
+
+
+def test_baseline_cache_partitioned_by_device():
+    pinned = Session(device=0, timer=Timer(warmup=0, reps=1))
+    unpinned = Session(timer=Timer(warmup=0, reps=1))
+    assert pinned._device_token() is not None
+    assert unpinned._device_token() is None
+    pinned._baseline[(pinned._device_token(), "O3", True)] = 1.25
+    # baseline_ns reads exactly the device-partitioned key...
+    assert pinned.baseline_ns("O3") == 1.25
+    # ...so the same (opt_level, use_db) under another device token is a miss:
+    # a fan-out shard can never read another device's baseline
+    assert (unpinned._device_token(), "O3", True) not in pinned._baseline
+
+
+# ------------------------------------------------------- fan_out scheduler
+def test_fan_out_single_device_equals_run(tmp_path):
+    runs = {}
+    db = str(tmp_path / "db.json")
+    session = Session(db=db, timer=Timer(warmup=0, reps=1))
+    result = session.fan_out(_plan(["a", "b", "c"], runs=runs),
+                             devices=[None])  # unpinned single shard
+    assert result.summary().startswith("3 measured")
+    assert runs == {"a": 1, "b": 1, "c": 1}
+    assert len(LatencyDB(db)) == 3
+    # second fan-out: every shard sees the flushed records as cache hits
+    again = session.fan_out(_plan(["a", "b", "c"], runs=runs), devices=[None])
+    assert len(again.cached) == 3 and runs == {"a": 1, "b": 1, "c": 1}
+
+
+def test_fan_out_requires_devices():
+    with pytest.raises(ValueError):
+        Session(timer=Timer(warmup=0, reps=1)).fan_out(_plan(["a"]), devices=[])
+
+
+def test_fan_out_merges_in_memory_dbs_without_path():
+    session = Session(timer=Timer(warmup=0, reps=1))
+    result = session.fan_out(_plan(["a", "b", "c", "d"]), devices=[None, None])
+    assert len(result.measured) == 4
+    assert len(session.db) == 4  # merged despite no disk path
+
+
+# ------------------------------------- concurrent flushes must not clobber
+def test_concurrent_sessions_one_db_path_lose_no_records(tmp_path):
+    """Regression for the clobber bug: two sessions interleaving per-probe
+    flushes to one path used to each rewrite the whole file, so the last
+    writer silently dropped the other's records."""
+    db = str(tmp_path / "shared.json")
+    plans = (_plan([f"x{i}" for i in range(6)]),
+             _plan([f"y{i}" for i in range(6)]))
+    sessions = [Session(db=LatencyDB(path=db), timer=Timer(warmup=0, reps=1))
+                for _ in plans]
+    threads = [threading.Thread(target=s.run, args=(p,))
+               for s, p in zip(sessions, plans)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ops = {r.op for r in LatencyDB(db).records()}
+    assert ops == {f"x{i}" for i in range(6)} | {f"y{i}" for i in range(6)}
+
+
+# ----------------------------------------------- end-to-end (2 sim devices)
+@pytest.mark.slow
+def test_sharded_equals_serial_on_simulated_devices():
+    """Acceptance: fan_out of a table2 subset over 2 simulated devices yields
+    the same record set as the serial run, merged into one DB."""
+    out = run_with_devices("""
+import jax
+assert len(jax.local_devices()) == 2, jax.local_devices()
+from repro.api import Session, named_plan
+from repro.core.timing import Timer
+
+# the table2 plan, trimmed to a fast registry subset (same probe types)
+plan = named_plan("table2").filter(
+    ops=("clock_overhead", "add", "mul", "sqrt", "popc"))
+plan = plan.filter(opt_levels=("O0", "O3"))
+assert len(plan) == 10, [p.op for p in plan]
+serial = Session(timer=Timer(warmup=0, reps=2)).run(plan)
+fan = Session(timer=Timer(warmup=0, reps=2))
+result = fan.fan_out(plan)
+assert not result.failed and not serial.failed
+skeys = sorted(r.key() for r in serial.db.records())
+fkeys = sorted(r.key() for r in result.db.records())
+assert skeys == fkeys, (skeys, fkeys)
+print("OK", len(fkeys))
+""", n_devices=2)
+    assert "OK 10" in out
+
+
+@pytest.mark.slow
+def test_fan_out_pins_each_shard_to_its_device():
+    out = run_with_devices("""
+import jax
+from repro.api import Plan, Session
+from repro.core.timing import Timer
+
+devs = jax.local_devices()
+session = Session(timer=Timer(warmup=0, reps=1))
+seen = []
+orig_init = Session.__init__
+def spy(self, *a, **kw):
+    orig_init(self, *a, **kw)
+    if kw.get("device") is not None:
+        seen.append((kw["device"].id, self.timer.device.id))
+Session.__init__ = spy
+session.fan_out(Plan.instructions(ops=("add", "mul"), opt_levels=("O3",)),
+                devices=devs)
+assert sorted(seen) == [(0, 0), (1, 1)], seen
+print("PINNED", len(seen))
+""", n_devices=2)
+    assert "PINNED 2" in out
+
+
+@pytest.mark.slow
+def test_shard_cli_smoke(tmp_path):
+    db = tmp_path / "db.json"
+    out = run_with_devices(f"""
+from repro.api import cli
+args = ["characterize", "--plan", "table2", "--ops", "add,mul",
+        "--opt-levels", "O3", "--reps", "2", "--warmup", "0",
+        "--db", {str(db)!r}, "--shard", "auto"]
+assert cli.main(args) == 0
+assert cli.main(args) == 0  # second run: shards resume from the merged DB
+""", n_devices=2)
+    blob = json.loads(db.read_text())
+    assert {r["op"] for r in blob["records"]} == {"add", "mul"}
+    assert not blob["failures"]
+
+
+def test_shard_cli_rejects_garbage(tmp_path, capsys):
+    from repro.api import cli
+
+    rc = cli.main(["characterize", "--plan", "quick", "--ops", "add",
+                   "--db", str(tmp_path / "db.json"), "--shard", "zero"])
+    assert rc == 2
+    assert "--shard" in capsys.readouterr().err

@@ -137,6 +137,134 @@ def test_recover_skips_partial_objects_without_raising(tmp_path):
     assert len(rec) == 1 and rec.failures() == []
 
 
+# ----------------------------------------------------------- merge semantics
+def _rec(op="add", ns=1.0, measured_at="2026-01-01T00:00:00", device="cpu"):
+    return LatencyRecord(op=op, category="int_arith", dtype="int32",
+                         opt_level="O3", latency_ns=ns, mad_ns=0.0, cycles=ns,
+                         guard=0, net_latency_ns=ns, device_kind=device,
+                         backend="cpu", jax_version="0.8.2", n_samples=3,
+                         measured_at=measured_at)
+
+
+def _fail(op="add", failed_at="2026-01-01T00:00:00"):
+    return ProbeFailure(op=op, dtype="int32", opt_level="O3",
+                        device_kind="cpu", backend="cpu", jax_version="0.8.2",
+                        error_type="ValueError", message="bad",
+                        failed_at=failed_at)
+
+
+def test_merge_newest_measured_at_wins():
+    old = LatencyDB()
+    old.add(_rec(ns=100.0, measured_at="2026-01-01T00:00:00"))
+    new = LatencyDB()
+    new.add(_rec(ns=5.0, measured_at="2026-06-01T00:00:00"))
+    assert old.merge(new).get(_rec().key()).latency_ns == 5.0
+    # merging the stale copy back does NOT regress the value
+    assert new.merge(old).get(_rec().key()).latency_ns == 5.0
+    # equal timestamps keep the current (in-memory) record
+    a, b = LatencyDB(), LatencyDB()
+    a.add(_rec(ns=1.0))
+    b.add(_rec(ns=2.0))
+    assert a.merge(b).get(_rec().key()).latency_ns == 1.0
+
+
+def test_merge_success_supersedes_failure_across_shards():
+    failed_shard = LatencyDB()
+    failed_shard.add_failure(_fail(failed_at="2026-06-01T00:00:00"))
+    ok_shard = LatencyDB()
+    ok_shard.add(_rec(measured_at="2026-01-01T00:00:00"))  # older than the failure
+    merged = ok_shard.merge(failed_shard)
+    assert merged.failures() == []
+    assert merged.get(_rec().key()) is not None
+    # and in the other direction (failure merged into DB that has the success)
+    f2 = LatencyDB()
+    f2.add_failure(_fail())
+    f2.merge(ok_shard)
+    assert f2.failures() == [] and len(f2) == 1
+
+
+def test_merge_failures_newest_wins():
+    a, b = LatencyDB(), LatencyDB()
+    a.add_failure(_fail(failed_at="2026-01-01T00:00:00"))
+    b.add_failure(_fail(failed_at="2026-06-01T00:00:00"))
+    assert a.merge(b).failures()[0].failed_at == "2026-06-01T00:00:00"
+
+
+def test_merge_multiple_and_disjoint():
+    a, b, c = LatencyDB(), LatencyDB(), LatencyDB()
+    a.add(_rec("add"))
+    b.add(_rec("mul"))
+    c.add(_rec("sqrt"))
+    assert {r.op for r in a.merge(b, c).records()} == {"add", "mul", "sqrt"}
+
+
+# ----------------------------------------------------- concurrent-flush safety
+def test_save_merges_on_disk_state_no_clobber(tmp_path):
+    """Regression for the clobber bug: two DBs flushing to one path used to
+    last-writer-wins the whole file; save now read-merges before writing."""
+    path = str(tmp_path / "shared.json")
+    a, b = LatencyDB(path), LatencyDB(path)
+    a.add(_rec("add"))
+    b.add(_rec("mul"))
+    a.save()
+    b.save()  # merges a's flush instead of overwriting it
+    ops = {r.op for r in LatencyDB(path).records()}
+    assert ops == {"add", "mul"}
+    # b learned a's records during its flush (cross-writer resume)
+    assert {r.op for r in b.records()} == {"add", "mul"}
+
+
+def test_save_merge_keeps_newest_on_conflict(tmp_path):
+    path = str(tmp_path / "shared.json")
+    stale, fresh = LatencyDB(path), LatencyDB(path)
+    fresh.add(_rec(ns=5.0, measured_at="2026-06-01T00:00:00"))
+    fresh.save()
+    stale.add(_rec(ns=100.0, measured_at="2026-01-01T00:00:00"))
+    stale.save()
+    assert LatencyDB(path).get(_rec().key()).latency_ns == 5.0
+
+
+def test_save_without_merge_mirrors_memory(tmp_path):
+    path = str(tmp_path / "db.json")
+    a = LatencyDB(path)
+    a.add(_rec("add"))
+    a.save()
+    b = LatencyDB(path)
+    b._records.clear()
+    b.add(_rec("mul"))
+    b.save(merge_on_disk=False)
+    assert {r.op for r in LatencyDB(path).records()} == {"mul"}
+
+
+def test_atomic_save_crash_leaves_previous_file_intact(tmp_path, monkeypatch):
+    """A writer killed mid-save must never leave a truncated file at the DB
+    path (the exact damage LatencyDB.recover exists to salvage)."""
+    import json as json_mod
+
+    path = str(tmp_path / "db.json")
+    db = LatencyDB(path)
+    db.add(_rec("add"))
+    db.save()
+    before = open(path).read()
+
+    crasher = LatencyDB(path)
+    crasher.add(_rec("mul"))
+    real_dump = json_mod.dump
+
+    def dump_then_die(obj, fp, **kw):
+        fp.write('{"records": [{"op": "trunc')  # partial bytes hit the temp file
+        raise OSError("disk full")
+
+    monkeypatch.setattr(json_mod, "dump", dump_then_die)
+    with pytest.raises(OSError):
+        crasher.save()
+    monkeypatch.setattr(json_mod, "dump", real_dump)
+
+    assert open(path).read() == before          # previous file untouched
+    assert len(LatencyDB(path)) == 1            # and still strictly loadable
+    assert not list(tmp_path.glob("*.tmp"))     # no orphaned temp files
+
+
 def test_compare_markdown_pairs_within_one_environment_only():
     """Regression: dispatch and in-kernel records from different
     device/backend/jax environments must never be paired into a ratio."""
