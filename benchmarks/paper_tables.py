@@ -7,6 +7,7 @@ Paper artifact -> bench:
   Fig. 6  global/L1/L2 + texture analog         -> bench_memory_hierarchy
   Table IV shared/constant memory analog        -> bench_onchip_memory
   Fig. 3  in-pipeline vs dispatch sampling      -> bench_inkernel_vs_dispatch
+  Table IV + Fig. 6 in-kernel memory ladder     -> bench_inkernel_memory
   (framework) attention/kernel-path comparison  -> bench_attention_impls
   (framework) sharded vs serial fan-out scaling -> bench_fanout_scaling
   (deliverable g) roofline table from dry-runs  -> bench_roofline
@@ -167,6 +168,60 @@ def bench_onchip_memory(timer: Timer) -> list[tuple[str, float, str]]:
              "interpret mode on CPU)"),
             ("onchip.host_chase", host.latency_ns / 1e3,
              "host-level chase, same working set")]
+
+
+# --------------------------------- Table IV + Fig. 6: in-kernel memory rows
+def bench_inkernel_memory(timer: Timer, quick: bool = False
+                          ) -> list[tuple[str, float, str]]:
+    """In-kernel chase ladder + host twins (docs/memory.md): per-load latency
+    vs working-set size with the residency (VMEM-pinned vs HBM-streaming)
+    recorded per rung. On TPU the in-kernel column is the paper's Table IV /
+    Fig. 6 number; in interpret mode it validates the machinery."""
+    from repro.kernels.chase import VMEM_BUDGET_BYTES
+
+    sizes = ([VMEM_BUDGET_BYTES >> 6, VMEM_BUDGET_BYTES, VMEM_BUDGET_BYTES << 1]
+             if quick else None)
+    session = Session(db=f"{RESULTS}/latency_db.json", timer=timer)
+    result = session.run(Plan.memory_inkernel(sizes), force=True)
+    db = session.db
+    # the shared bench DB also holds op-chain pairings; the ladder artifact
+    # renders only the memory family
+    from repro.core.latency_db import LatencyDB
+
+    mem_db = LatencyDB()
+    mem_db.extend(r for r in db.records() if r.category == "memory")
+    with open(f"{RESULTS}/inkernel_memory.md", "w") as f:
+        f.write(mem_db.compare_markdown())
+    points = []
+    for r in result.records():
+        if not r.op.startswith("inkernel.mem."):
+            continue
+        pt = membench.chasepoint_from_record(r)
+        # env-filtered like compare_markdown: the shared bench DB accumulates
+        # runs across devices/jax versions, and a cross-env pairing is
+        # meaningless
+        host = db.lookup_ns(f"mem.chase.ws{pt.working_set_bytes}",
+                            **session.env)
+        points.append({"working_set_bytes": pt.working_set_bytes,
+                       "inkernel_ns": pt.latency_ns,
+                       "host_ns": host,
+                       "memory_space": pt.memory_space,
+                       "line_bytes": pt.line_bytes})
+    points.sort(key=lambda p: p["working_set_bytes"])
+    dump_json({"vmem_budget_bytes": VMEM_BUDGET_BYTES, "points": points},
+              f"{RESULTS}/inkernel_memory.json")
+    rows = []
+    for p in points:
+        host = (f"{p['host_ns']:.2f}ns" if p["host_ns"] is not None else "—")
+        rows.append((f"inkernel.mem.ws_{p['working_set_bytes']}",
+                     p["inkernel_ns"] / 1e3,
+                     f"space={p['memory_space']} host={host} "
+                     "(paper Table IV/Fig. 6 in-kernel)"))
+    crossed = sorted({p["memory_space"] for p in points})
+    rows.append(("inkernel.mem.boundary", 0.0,
+                 f"ladder spans residencies {crossed} around the "
+                 f"{VMEM_BUDGET_BYTES >> 20}MiB VMEM budget"))
+    return rows
 
 
 # ------------------------------------------ Fig. 3: in-pipeline vs dispatch

@@ -32,6 +32,7 @@ def main() -> None:
         "memory": lambda t: pt.bench_memory_hierarchy(t, quick=args.quick),
         "onchip": lambda t: pt.bench_onchip_memory(t),
         "inkernel": lambda t: pt.bench_inkernel_vs_dispatch(t, quick=args.quick),
+        "inkernel_memory": lambda t: pt.bench_inkernel_memory(t, quick=args.quick),
         "fanout": lambda t: pt.bench_fanout_scaling(t, quick=args.quick),
         "attention": lambda t: pt.bench_attention_impls(t),
         "roofline": lambda t: pt.bench_roofline(t),

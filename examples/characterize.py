@@ -10,7 +10,7 @@ cache hit against the DB), an interrupted run resumes where it stopped, and
 ``--force`` re-measures. ``--shard`` fans the plan out across every local
 device — one device-pinned session per shard, merged into the same DB (see
 docs/fanout.md). The same pipeline is available as
-``python -m repro characterize --plan quick|table2|memory|inkernel|full
+``python -m repro characterize --plan quick|table2|memory|inkernel|memory-inkernel|full
 [--shard auto|N]``.
 """
 import argparse

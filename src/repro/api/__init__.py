@@ -15,20 +15,21 @@ that pipeline as an API:
   device, per-shard DBs merged — see docs/fanout.md).
 * :class:`ResultSet` — per-probe outcomes plus report helpers.
 
-CLI: ``python -m repro characterize --plan quick|table2|memory|inkernel|full
-[--shard auto|N]``.
+CLI: ``python -m repro characterize --plan
+quick|table2|memory|inkernel|memory-inkernel|full [--shard auto|N]``.
 The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
 ``membench.sweep``) are deprecation shims over this package.
 """
 from repro.api.plan import PLAN_NAMES, QUICK_OPS, Plan, named_plan
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
-                              KernelChainProbe, KernelProbe, MemoryProbe,
-                              Probe, ProbeContext)
+                              KernelChainProbe, KernelProbe,
+                              MemoryChaseProbe, MemoryProbe, Probe,
+                              ProbeContext)
 from repro.api.session import ProbeResult, ResultSet, Session
 
 __all__ = [
     "PLAN_NAMES", "QUICK_OPS", "Plan", "named_plan",
     "ClockOverheadProbe", "InstructionProbe", "KernelChainProbe",
-    "KernelProbe", "MemoryProbe", "Probe", "ProbeContext", "ProbeResult",
-    "ResultSet", "Session",
+    "KernelProbe", "MemoryChaseProbe", "MemoryProbe", "Probe",
+    "ProbeContext", "ProbeResult", "ResultSet", "Session",
 ]

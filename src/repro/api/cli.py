@@ -7,6 +7,7 @@ Examples::
     python -m repro characterize --plan full --db /tmp/db.json --force
     python -m repro characterize --plan table2 --ops add,mul --table
     python -m repro characterize --plan inkernel --table   # in-pipeline probes
+    python -m repro characterize --plan memory-inkernel --table  # VMEM/HBM ladder
     python -m repro characterize --plan full --shard auto  # one shard per device
     python -m repro characterize --plan table2 --shard 4   # first 4 devices
 
@@ -58,8 +59,8 @@ def build_parser() -> argparse.ArgumentParser:
                     help="comma-separated opt-level filter (e.g. O0,O3)")
     ch.add_argument("--table", action="store_true",
                     help="print the Table II analog after the run (plus the "
-                         "dispatch-vs-in-kernel pairing when the DB holds "
-                         "inkernel.* records)")
+                         "host-vs-in-kernel pairing when the DB holds "
+                         "inkernel.* records — op chains and memory rows)")
     ch.add_argument("--recover", action="store_true",
                     help="salvage complete records from a truncated/corrupt "
                          "DB file instead of refusing to load it")
@@ -148,7 +149,7 @@ def cmd_characterize(args: argparse.Namespace) -> int:
         print(result.table_markdown())
         compare = session.db.compare_markdown()
         if compare.count("\n") > 1:  # header + separator + >=1 paired row
-            print("\n== dispatch vs in-kernel (paper's in-pipeline method) ==")
+            print("\n== host vs in-kernel (paper's in-pipeline method) ==")
             print(compare)
     return 1 if result.failed else 0
 

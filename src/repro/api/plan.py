@@ -6,8 +6,9 @@ ladder, clock overhead per level), ``+`` composes plans, and ``filter`` trims
 them — so "the full paper reproduction" is one Plan expression, and CI's
 quick pass is the same expression with a keep-set applied.
 
-Named plans (``quick`` / ``table2`` / ``memory`` / ``full``) back the
-``python -m repro characterize --plan`` CLI.
+Named plans (``quick`` / ``table2`` / ``memory`` / ``inkernel`` /
+``memory-inkernel`` / ``full``) back the ``python -m repro characterize
+--plan`` CLI.
 """
 from __future__ import annotations
 
@@ -19,8 +20,8 @@ from repro.core.chains import OpSpec
 from repro.core.optlevels import OPT_LEVELS
 
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
-                              KernelChainProbe, KernelProbe, MemoryProbe,
-                              Probe)
+                              KernelChainProbe, KernelProbe,
+                              MemoryChaseProbe, MemoryProbe, Probe)
 
 # The CLI/CI keep-set: one representative per interesting latency class,
 # including the divisor-taxonomy splits the paper highlights.
@@ -28,7 +29,8 @@ QUICK_OPS = ("add", "mul", "mad", "div.s.regular", "div.s.irregular",
              "div.s.runtime", "fma.float32", "div.runtime.float32", "sqrt",
              "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16")
 
-PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "full")
+PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "memory-inkernel",
+              "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +133,32 @@ class Plan:
                     name="kernels")
 
     @staticmethod
+    def memory_inkernel(working_sets: Sequence[int] | None = None,
+                        lens: tuple[int, int] | None = None,
+                        host_pair: bool = True,
+                        host_steps: tuple[int, int] = (2048, 6144)) -> "Plan":
+        """In-kernel chase ladder over working-set sizes spanning the
+        VMEM/HBM boundary (paper Table IV below it, Fig. 6 above it), paired
+        by default with the host-level chase at the same sizes so one run
+        fills both sides of the host-vs-in-kernel comparison table.
+
+        The default ladder brackets ``kernels.chase.VMEM_BUDGET_BYTES``:
+        four rungs resident below it, the budget itself, and two rungs above
+        that stream with ``memory_space=ANY``.
+        """
+        if working_sets is None:
+            from repro.kernels.chase import VMEM_BUDGET_BYTES as budget
+
+            working_sets = [budget >> 8, budget >> 6, budget >> 4,
+                            budget >> 2, budget, budget << 1, budget << 2]
+        probes: list[Probe] = [MemoryChaseProbe(ws, lens=lens)
+                               for ws in working_sets]
+        if host_pair:
+            probes += [MemoryProbe(ws, steps=host_steps)
+                       for ws in working_sets]
+        return Plan(_dedupe(tuple(probes)), name="memory-inkernel")
+
+    @staticmethod
     def inkernel(registry: Sequence[OpSpec] | None = None,
                  ops: Iterable[str] | None = None,
                  categories: Iterable[str] | None = None,
@@ -181,7 +209,8 @@ def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
 
 
 def named_plan(name: str) -> Plan:
-    """The CLI's plan registry. quick | table2 | memory | inkernel | full."""
+    """The CLI's plan registry.
+    quick | table2 | memory | inkernel | memory-inkernel | full."""
     if name == "quick":
         plan = (Plan.clock_overhead(("O0", "O3"))
                 + Plan.instructions(ops=QUICK_OPS, opt_levels=("O0", "O3"))
@@ -194,12 +223,15 @@ def named_plan(name: str) -> Plan:
         plan = Plan.memory()
     elif name == "inkernel":
         plan = Plan.inkernel()
+    elif name == "memory-inkernel":
+        plan = Plan.memory_inkernel()
     elif name == "full":
         plan = (Plan.clock_overhead(OPT_LEVELS)
                 + Plan.instructions(opt_levels=OPT_LEVELS)
                 + Plan.memory()
                 + Plan.kernels(("fma", "add", "rsqrt"))
-                + Plan.inkernel())
+                + Plan.inkernel()
+                + Plan.memory_inkernel())
     else:
         raise ValueError(f"unknown plan {name!r}; choose from {PLAN_NAMES}")
     return dataclasses.replace(plan, name=name)

@@ -19,6 +19,10 @@ Concrete probes wrap the existing measurement machinery:
 * :class:`KernelChainProbe` — any registry :class:`OpSpec` lowered into a
   Pallas ``fori_loop`` chain (``repro.inkernel``): the paper's in-pipeline
   measurement, one probe per table row.
+* :class:`MemoryChaseProbe` — the pointer chase *inside* a Pallas kernel at
+  one working-set size, VMEM-resident below the footprint budget and
+  HBM-streaming (``memory_space=ANY``) above — the in-kernel Table IV /
+  Fig. 6 analog, one probe per ladder rung.
 
 New probe types (energy counters, occupancy sweeps, ...) subclass
 :class:`Probe` and immediately gain caching, resumability and structured
@@ -159,8 +163,10 @@ class MemoryProbe(Probe):
     category = "memory"
     dtype = "int32"
     DEFAULT_STEPS = (2048, 6144)
+    DEFAULT_LINE_BYTES = 64
 
-    def __init__(self, working_set_bytes: int, line_bytes: int = 64,
+    def __init__(self, working_set_bytes: int,
+                 line_bytes: int = DEFAULT_LINE_BYTES,
                  steps: tuple[int, int] = DEFAULT_STEPS):
         self.working_set_bytes = int(working_set_bytes)
         self.line_bytes = line_bytes
@@ -169,9 +175,13 @@ class MemoryProbe(Probe):
         self.op = self.base_op
         if self.steps != self.DEFAULT_STEPS:
             self.op += f".s{self.steps[0]}-{self.steps[1]}"
+        if self.line_bytes != self.DEFAULT_LINE_BYTES:
+            self.op += f".line{self.line_bytes}"
 
     def match_names(self) -> frozenset[str]:
-        return frozenset((self.op, self.base_op))
+        # "mem" is the whole-family base row: ``--ops mem`` keeps every
+        # memory-hierarchy rung, host-level and in-kernel alike
+        return frozenset((self.op, self.base_op, "mem"))
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
         pt = membench.measure_latency(self.working_set_bytes,
@@ -309,3 +319,68 @@ class KernelChainProbe(Probe):
 
 
 KernelChainProbe._baselines = weakref.WeakKeyDictionary()
+
+
+class MemoryChaseProbe(Probe):
+    """In-kernel pointer chase at one working-set size: the memory-hierarchy
+    rows of the in-pipeline method (paper Table IV / Fig. 6 analogs).
+
+    The dependent chase runs *inside* a Pallas kernel
+    (``repro.kernels.chase``) under the same two-length ``Timer.slope``
+    extraction as :class:`KernelChainProbe`; the ring's residency is selected
+    by footprint — BlockSpec-pinned in VMEM below the budget (Table IV, the
+    shared-memory analog), ``memory_space=ANY`` streaming from HBM above
+    (Fig. 6, the global-memory analog) — and the residency actually used is
+    persisted in the record notes (``space=vmem|any``) together with the
+    working-set / line metadata (:func:`membench.chasepoint_from_record`).
+
+    Op name ``inkernel.mem.<bytes>``; ``opt_level`` pinned to ``"O3"`` like
+    every Pallas probe (a kernel is always fully compiled). Non-default step
+    counts, a non-default line padding or a *forced* memory space are a
+    different experiment and become fidelity suffixes in the cache identity,
+    like ``MemoryProbe.steps``.
+    """
+
+    category = "memory"
+    dtype = "int32"
+    DEFAULT_LINE_BYTES = 64
+
+    def __init__(self, working_set_bytes: int,
+                 line_bytes: int = DEFAULT_LINE_BYTES,
+                 lens: tuple[int, int] | None = None,
+                 memory_space: str | None = None, reps: int = 5):
+        from repro import inkernel
+
+        self.working_set_bytes = int(working_set_bytes)
+        self.line_bytes = line_bytes
+        self.lens = tuple(lens) if lens is not None else tuple(inkernel.CHASE_LENS)
+        self.memory_space = memory_space  # None = select by footprint
+        self.reps = reps
+        self.opt_level = "O3"
+        self.base_op = f"inkernel.mem.{self.working_set_bytes}"
+        self.host_op = f"mem.chase.ws{self.working_set_bytes}"
+        self.op = self.base_op
+        if self.lens != tuple(inkernel.CHASE_LENS):
+            self.op += f".l{self.lens[0]}-{self.lens[1]}"
+        if self.line_bytes != self.DEFAULT_LINE_BYTES:
+            self.op += f".line{self.line_bytes}"
+        if memory_space is not None:
+            self.op += f".{memory_space}"
+
+    def match_names(self) -> frozenset[str]:
+        # addressable by the full derived name, the unsuffixed in-kernel row,
+        # the host-level twin (``--ops mem.chase.ws8192`` keeps both sides of
+        # the pairing) and the whole-family base row ``mem``
+        return frozenset((self.op, self.base_op, self.host_op, "mem"))
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        from repro import inkernel
+
+        m, space = inkernel.measure_chase_full(
+            self.working_set_bytes, line_bytes=self.line_bytes,
+            lens=self.lens, timer=ctx.timer, memory_space=self.memory_space,
+            reps=self.reps)
+        return self._record(
+            ctx, m, notes=f"pallas chase ws={self.working_set_bytes} "
+                          f"line={self.line_bytes} space={space} "
+                          f"lens={self.lens[0]}-{self.lens[1]}")

@@ -10,6 +10,7 @@ import contextlib
 import dataclasses
 import json
 import os
+import re
 from typing import Iterable
 
 try:
@@ -292,7 +293,9 @@ class LatencyDB:
         for r in self._records.values():
             by_op.setdefault((r.category, r.op, r.dtype), {})[r.opt_level] = r
         rows = []
-        for (cat, op, dt), levels in sorted(by_op.items()):
+        for (cat, op, dt), levels in sorted(
+                by_op.items(),
+                key=lambda kv: (kv[0][0], self._natural(kv[0][1]), kv[0][2])):
             row = [cat, op, dt]
             for lv in opt_levels:
                 rec = levels.get(lv)
@@ -306,18 +309,42 @@ class LatencyDB:
             {"O3": "Optimized", "O0": "Non-Optimized"}.get(lv, lv) for lv in opt_levels]
         return markdown_table(headers, rows)
 
+    @staticmethod
+    def _host_twin(base: str) -> str:
+        """Host-level row an in-kernel row pairs with.
+
+        Op-chain rows pair by identical name (``inkernel.add`` <-> ``add``);
+        the memory rows follow their own naming on each side, so
+        ``inkernel.mem.<N>`` pairs with the host chase at the same working
+        set, ``mem.chase.ws<N>``. Fidelity-suffixed variants fall through
+        unchanged (and therefore stay unpaired — a different experiment).
+        """
+        if base.startswith("mem.") and base[4:].isdigit():
+            return f"mem.chase.ws{base[4:]}"
+        return base
+
+    @staticmethod
+    def _natural(op: str) -> tuple:
+        """Sort key ordering embedded integers numerically, so the memory
+        ladder reads ws4096 < ws65536 < ws1048576 instead of lexically."""
+        return tuple(int(p) if p.isdigit() else p
+                     for p in re.split(r"(\d+)", op))
+
     def compare_markdown(self, prefix: str = "inkernel.",
                          opt_level: str = "O3") -> str:
-        """Dispatch-vs-in-kernel pairing: ops measured both ways, side by side.
+        """Host-vs-in-kernel pairing: ops measured both ways, side by side.
 
-        Pairs every ``<op>`` record with its ``<prefix><op>`` twin at the same
-        dtype, opt level **and environment** — the DB accumulates runs from
-        multiple devices/jax versions (that is how Table III diffs are made),
-        and a CPU-dispatch vs TPU-in-kernel ratio would be meaningless.
-        Fidelity-suffixed in-kernel variants like ``inkernel.add.l4-32`` are a
+        Pairs every host-level record with its ``<prefix>``-named twin at the
+        same dtype, opt level **and environment** — the DB accumulates runs
+        from multiple devices/jax versions (that is how Table III diffs are
+        made), and a CPU-dispatch vs TPU-in-kernel ratio would be
+        meaningless. Twin naming is per-family (:meth:`_host_twin`):
+        ``inkernel.add`` <-> dispatch ``add`` (Fig. 3), ``inkernel.mem.<N>``
+        <-> host chase ``mem.chase.ws<N>`` (Table IV / Fig. 6).
+        Fidelity-suffixed variants like ``inkernel.add.l4-32`` are a
         different experiment and are *not* paired. The ratio column is the
-        in-pipeline fraction of the dispatch-level number — the
-        launch/dispatch blur the paper's in-pipeline sampling removes.
+        in-pipeline fraction of the host-level number — the launch/dispatch
+        blur the paper's in-pipeline sampling removes.
         """
         plain: dict[tuple, LatencyRecord] = {}
         inker: dict[tuple, LatencyRecord] = {}
@@ -326,12 +353,12 @@ class LatencyDB:
                 continue
             env = (r.device_kind, r.backend, r.jax_version)
             if r.op.startswith(prefix):
-                inker[env + (r.op[len(prefix):], r.dtype)] = r
+                inker[env + (self._host_twin(r.op[len(prefix):]), r.dtype)] = r
             else:
                 plain[env + (r.op, r.dtype)] = r
         rows = []
         for k in sorted(set(plain) & set(inker), key=lambda k: (
-                plain[k].category, k)):
+                plain[k].category,) + k[:3] + (self._natural(k[3]), k[4])):
             d, ik = plain[k], inker[k]
             ratio = (f"{ik.latency_ns / d.latency_ns:.3f}"
                      if d.latency_ns > 0 else "—")

@@ -10,8 +10,11 @@ them. Latency-per-load as a function of working-set size exposes every level
 of the hierarchy as a capacity cliff (CPU: L1/L2/L3/DRAM; TPU: VMEM vs HBM).
 
 The Pallas ``chase`` kernel (kernels/chase.py) runs the same probe *inside* a
-TPU kernel with BlockSpec-pinned VMEM residency — the shared-memory (Table IV)
-analog — and is validated here in interpret mode.
+TPU kernel at a footprint-selected residency — BlockSpec-pinned in VMEM (the
+shared-memory / Table IV analog) or streaming from HBM via ``memory_space=ANY``
+(the Fig. 6 analog); ``build_ring`` below is the shared probe input for both
+and for the host-level sweep, and ``repro.api.MemoryChaseProbe`` is its
+scheduled front door (docs/memory.md).
 """
 from __future__ import annotations
 
@@ -36,17 +39,37 @@ class MemPoint:
 
 
 def _ring_permutation(n: int, seed: int = 0) -> np.ndarray:
-    """Random single-cycle permutation (sattolo), so the chase visits all slots."""
+    """Random single-cycle permutation, so the chase visits all slots.
+
+    Threading *any* random visiting order into a pointer table yields a single
+    n-cycle, so a vectorized shuffle suffices (the old element-wise sattolo
+    loop made >16 MiB rings cost seconds of pure Python before measuring).
+    """
     rng = np.random.RandomState(seed)
-    idx = np.arange(n, dtype=np.int32)
-    for i in range(n - 1, 0, -1):
-        j = rng.randint(0, i)
-        idx[i], idx[j] = idx[j], idx[i]
-    # idx is now a random permutation; convert to a cycle via pointer table
+    idx = rng.permutation(n).astype(np.int32)
     ring = np.empty(n, dtype=np.int32)
     ring[idx[:-1]] = idx[1:]
     ring[idx[-1]] = idx[0]
     return ring
+
+
+def build_ring(working_set_bytes: int, line_bytes: int = 64, seed: int = 0
+               ) -> tuple[jax.Array, jax.Array]:
+    """Line-padded chase ring covering ``working_set_bytes``: ``(ring, start)``.
+
+    One live slot per cache line (the paper's different-word-same-line trick
+    inverted: we *want* misses beyond the level capacity, so slots are
+    line-padded); slot values are absolute indices into the padded array, so
+    the same ring drives the host chase (``chase_fn``), the in-kernel VMEM
+    chase and the HBM-streaming chase (``kernels/chase.py``) — one probe
+    input, three residencies.
+    """
+    n = max(working_set_bytes // line_bytes, 8)
+    pad = line_bytes // 4
+    ring_np = _ring_permutation(n, seed) * pad
+    full = np.zeros(n * pad, dtype=np.int32)
+    full[np.arange(n) * pad] = ring_np
+    return jnp.asarray(full), jnp.asarray([0], jnp.int32)
 
 
 def chase_fn(steps: int):
@@ -60,32 +83,38 @@ def chase_fn(steps: int):
     return chase
 
 
+def _cold_latency_ns(fn, ring: jax.Array, start: jax.Array, steps: int) -> float:
+    """First-touch per-load latency of ``fn(ring, start)``, compile excluded.
+
+    The jit cache is warmed with a *shape-only* call on a zeroed ring of the
+    same shape, so the timed pass is the first execution touching ``ring``'s
+    memory but never an XLA compile. (``fn.lower().compile()`` does NOT
+    populate the jit dispatch cache: a sweep relying on it re-compiled inside
+    the timed cold pass at every new working-set shape, conflating
+    ``cold_latency_ns`` with ~40x its value of compile time.)
+    """
+    import time
+
+    jax.block_until_ready(fn(jnp.zeros_like(ring), start))
+    t0 = time.perf_counter_ns()
+    jax.block_until_ready(fn(ring, start))
+    return (time.perf_counter_ns() - t0) / steps
+
+
 def measure_latency(working_set_bytes: int, line_bytes: int = 64,
                     timer: Timer | None = None,
                     steps: tuple[int, int] = (2048, 6144)) -> MemPoint:
     """Per-load latency for a working set of the given size."""
     timer = timer or Timer(warmup=2, reps=15)
-    n = max(working_set_bytes // line_bytes, 8)
-    # Pad each slot to one cache line so every chase step touches a new line
-    # (the paper's different-word-same-line trick inverted: we *want* misses
-    # beyond the level capacity, so slots are line-padded).
-    pad = line_bytes // 4
-    ring_np = _ring_permutation(n) * pad
-    full = np.zeros(n * pad, dtype=np.int32)
-    full[np.arange(n) * pad] = ring_np
-    ring = jnp.asarray(full)
+    ring, _ = build_ring(working_set_bytes, line_bytes)
     start = jnp.asarray(0, jnp.int32)
 
     n1, n2 = steps
     f1 = jax.jit(chase_fn(n1))
     f2 = jax.jit(chase_fn(n2))
-    # Cold: first execution after transfer (compile separately first).
-    f2_cold = jax.jit(chase_fn(n2))
-    f2_cold.lower(ring, start).compile()
-    import time
-    t0 = time.perf_counter_ns()
-    jax.block_until_ready(f2_cold(ring, start))
-    cold_ns = (time.perf_counter_ns() - t0) / n2
+    # Cold: first execution after transfer (jit cache warmed shape-only,
+    # so no compile lands inside the timed pass).
+    cold_ns = _cold_latency_ns(jax.jit(chase_fn(n2)), ring, start, n2)
 
     m1 = timer.time_callable(f1, ring, start)
     m2 = timer.time_callable(f2, ring, start)
@@ -105,6 +134,31 @@ def mempoint_from_record(rec) -> MemPoint:
                     latency_ns=rec.latency_ns,
                     cold_latency_ns=float(fields.get("cold_ns", 0.0)),
                     stride_bytes=int(fields.get("stride", 64)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChasePoint:
+    """One in-kernel memory row (see api.MemoryChaseProbe): per-load latency
+    plus the working-set metadata persisted in the record's notes field."""
+
+    working_set_bytes: int
+    latency_ns: float
+    memory_space: str   # residency the kernel ran under: "vmem" | "any"
+    line_bytes: int
+
+
+def chasepoint_from_record(rec) -> ChasePoint:
+    """Rebuild a ChasePoint from an ``inkernel.mem.<bytes>`` LatencyDB record.
+
+    The probe encodes the working set in the op name and the residency /
+    line-size metadata as ``key=value`` pairs in the notes field.
+    """
+    fields = dict(kv.split("=", 1) for kv in rec.notes.split() if "=" in kv)
+    return ChasePoint(
+        working_set_bytes=int(fields["ws"]),
+        latency_ns=rec.latency_ns,
+        memory_space=fields.get("space", "vmem"),
+        line_bytes=int(fields.get("line", 64)))
 
 
 def sweep(working_sets: Sequence[int] | None = None, timer: Timer | None = None

@@ -12,17 +12,24 @@ dependent instruction *inside* the kernel. This subsystem is the TPU analog:
   in-kernel chain lengths, reusing ``Timer.slope`` so the DMA + launch
   overhead cancels exactly as the paper's clock-overhead subtraction;
 * :func:`supported` / :func:`supported_specs` — the lowering policy (64-bit
-  carries stay on the dispatch path: TPUs lack native i64/f64 lanes).
+  carries stay on the dispatch path: TPUs lack native i64/f64 lanes);
+* :func:`measure_chase_full` — the memory-hierarchy rows: the dependent
+  pointer chase (``repro.kernels.chase``) at one working-set size, VMEM- or
+  HBM-resident by footprint, under the same slope extraction.
 
-The scheduled front door is :class:`repro.api.KernelChainProbe` (plan name
-``inkernel``), which adds LatencyDB caching, resume and structured failures
-on top. See docs/inkernel.md for the methodology mapping to the paper.
+The scheduled front doors are :class:`repro.api.KernelChainProbe` (plan name
+``inkernel``) and :class:`repro.api.MemoryChaseProbe` (plan name
+``memory-inkernel``), which add LatencyDB caching, resume and structured
+failures on top. See docs/inkernel.md and docs/memory.md for the methodology
+mapping to the paper.
 """
 from repro.inkernel.factory import (build_chain, default_tile, supported,
                                     supported_specs, tiles)
-from repro.inkernel.measure import INKERNEL_LENS, measure_inkernel_full
+from repro.inkernel.measure import (CHASE_LENS, INKERNEL_LENS,
+                                    measure_chase_full, measure_inkernel_full)
 
 __all__ = [
-    "INKERNEL_LENS", "build_chain", "default_tile", "measure_inkernel_full",
-    "supported", "supported_specs", "tiles",
+    "CHASE_LENS", "INKERNEL_LENS", "build_chain", "default_tile",
+    "measure_chase_full", "measure_inkernel_full", "supported",
+    "supported_specs", "tiles",
 ]

@@ -18,6 +18,45 @@ from repro.inkernel.factory import build_chain, tiles
 # signal well above the (cancelled) launch overhead.
 INKERNEL_LENS = (8, 64)
 
+# Chase step counts for the in-kernel memory rows: long enough that the
+# per-load slope dominates the (cancelled) DMA-in of the ring on the VMEM
+# path, short enough that the serial dependent-load chain stays cheap to run
+# at both lengths even when every step streams from HBM.
+CHASE_LENS = (64, 192)
+
+
+def measure_chase_full(working_set_bytes: int, line_bytes: int = 64,
+                       lens: tuple[int, int] = CHASE_LENS,
+                       timer: Timer | None = None,
+                       interpret: bool | None = None,
+                       memory_space: str | None = None,
+                       reps: int | None = None) -> tuple[Measurement, str]:
+    """Per-load in-kernel chase latency at one working-set size.
+
+    The same two-length :meth:`Timer.slope` extraction as the op chains: two
+    kernels differing only in chase step count share the identical ring
+    residency, DMA and launch path, so the slope is the pure dependent-load
+    cost at whichever level the ring lives in. Returns ``(measurement,
+    memory_space)`` where the space is the residency actually used —
+    ``"vmem"`` (BlockSpec-resident, Table IV analog) or ``"any"``
+    (HBM-streaming, Fig. 6 analog) — selected by ring footprint unless
+    forced.
+    """
+    from repro.core.membench import build_ring
+    from repro.kernels.chase import chase, select_memory_space
+
+    timer = timer or Timer()
+    ring, start = build_ring(working_set_bytes, line_bytes)
+    space = (memory_space if memory_space is not None
+             else select_memory_space(ring.size * 4))
+
+    def fn_by_len(n: int):
+        return lambda r, s: chase(r, s, steps=n, interpret=interpret,
+                                  memory_space=space)
+
+    m = timer.slope(fn_by_len, *lens, ring, start, reps=reps)
+    return m, space
+
 
 def measure_inkernel_full(spec: OpSpec, lens: tuple[int, int] = INKERNEL_LENS,
                           shape: tuple[int, int] | None = None,

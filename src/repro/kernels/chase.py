@@ -1,11 +1,28 @@
 """In-kernel pointer chase: the memory-hierarchy probe as a TPU kernel.
 
 The host-level chase (core/membench.py) measures the *host* hierarchy; this
-kernel measures HBM->VMEM behaviour on TPU: the ring table is DMA'd into VMEM
-by the BlockSpec (resident probe, the paper's shared-memory/Table IV analog),
-and each step's address depends on the previous step's loaded value, so the
-chase cannot be pipelined — pure dependent-load latency. Rings larger than
-VMEM use memory_space=ANY so loads stream from HBM (the Fig. 6 analog).
+kernel measures HBM->VMEM behaviour on TPU. Each step's address depends on the
+previous step's loaded value, so the chase cannot be pipelined — pure
+dependent-load latency — and the ring's residency selects which level is
+probed:
+
+* **VMEM path** (ring fits in :data:`VMEM_BUDGET_BYTES`): the ring table is
+  DMA'd into VMEM once by its BlockSpec, so every chase step is a VMEM hit —
+  the resident probe, the paper's shared-memory / Table IV analog.
+* **ANY path** (ring exceeds the budget): the ring is handed to the kernel
+  with ``memory_space=ANY`` so it *stays in HBM*; each step issues an async
+  copy of the dependent word into a VMEM scratch cell and waits on it, so
+  every load streams from HBM — the paper's global-memory / Fig. 6 analog.
+  (Like the paper's chase, one word is loaded per step; the ring's *line
+  padding* is what guarantees each step lands on a distinct line. The old
+  code BlockSpec-pinned the ring unconditionally, so over-VMEM rings
+  silently measured VMEM; ``tests/test_memchase.py`` keeps that bug fixed.)
+
+:func:`select_memory_space` picks the path by ring footprint;
+``memory_space=`` forces one explicitly. Both kernel bodies run under the
+Pallas interpreter off-TPU (``use_interpret`` fallback), including the
+async-copy streaming body, so CI exercises the exact code that lowers on
+hardware.
 """
 from __future__ import annotations
 
@@ -15,30 +32,101 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import use_interpret
 
+# Conservative per-core VMEM capacity used for path selection (v4/v5 cores
+# have 16 MiB class VMEM; the compiler needs headroom for scratch + output,
+# but the ring dominates). Rings at or below fit BlockSpec-resident.
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
 
-def _chase_kernel(ring_ref, start_ref, o_ref, *, steps: int):
+MEMORY_SPACES = ("vmem", "any")
+
+
+def select_memory_space(ring_bytes: int,
+                        vmem_budget: int | None = None) -> str:
+    """Residency policy: ``"vmem"`` when the ring fits, ``"any"`` above.
+
+    ``vmem_budget`` overrides :data:`VMEM_BUDGET_BYTES` (tests shrink it to
+    exercise the streaming path on small rings).
+    """
+    budget = VMEM_BUDGET_BYTES if vmem_budget is None else int(vmem_budget)
+    return "vmem" if int(ring_bytes) <= budget else "any"
+
+
+def chase_in_specs(n: int, memory_space: str) -> list:
+    """The ``in_specs`` for an ``n``-slot ring chase under ``memory_space``.
+
+    Split out so tests can assert the residency contract directly: the
+    ``"any"`` spec must *not* carry a block shape (a shaped BlockSpec is what
+    DMA-pins the ring into VMEM — the original bug).
+    """
+    if memory_space == "vmem":
+        ring_spec = pl.BlockSpec((n,), lambda i: (0,))
+    elif memory_space == "any":
+        ring_spec = pl.BlockSpec(memory_space=pl.ANY)
+    else:
+        raise ValueError(
+            f"memory_space must be one of {MEMORY_SPACES}, got {memory_space!r}")
+    return [ring_spec, pl.BlockSpec((1,), lambda i: (0,))]
+
+
+def _chase_kernel_vmem(ring_ref, start_ref, o_ref, *, steps: int):
+    """Resident chase: the whole ring is a VMEM block, loads are VMEM hits."""
     def body(_, p):
         return pl.load(ring_ref, (pl.dslice(p, 1),))[0]
 
-    p0 = start_ref[0]
-    o_ref[0] = lax.fori_loop(0, steps, body, p0)
+    o_ref[0] = lax.fori_loop(0, steps, body, start_ref[0])
 
 
-@functools.partial(jax.jit, static_argnames=("steps", "interpret"))
-def chase(ring: jax.Array, start: jax.Array, *, steps: int,
-          interpret: bool | None = None) -> jax.Array:
-    """ring: [N] int32 single-cycle permutation; start: [1] int32."""
-    interpret = use_interpret() if interpret is None else interpret
+def _chase_kernel_any(ring_ref, start_ref, o_ref, line_ref, sem, *,
+                      steps: int):
+    """Streaming chase: the ring stays in HBM (``memory_space=ANY``); each
+    step copies the dependent word into the VMEM scratch cell and waits for
+    it — a dependent HBM load per step, nothing resident."""
+    def body(_, p):
+        cp = pltpu.make_async_copy(ring_ref.at[pl.dslice(p, 1)], line_ref, sem)
+        cp.start()
+        cp.wait()
+        return line_ref[0]
+
+    o_ref[0] = lax.fori_loop(0, steps, body, start_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("steps", "interpret", "memory_space"))
+def _chase(ring: jax.Array, start: jax.Array, *, steps: int,
+           interpret: bool, memory_space: str) -> jax.Array:
     (n,) = ring.shape
+    if memory_space == "vmem":
+        kernel = functools.partial(_chase_kernel_vmem, steps=steps)
+        scratch = []
+    else:
+        kernel = functools.partial(_chase_kernel_any, steps=steps)
+        scratch = [pltpu.VMEM((1,), jnp.int32), pltpu.SemaphoreType.DMA]
     return pl.pallas_call(
-        functools.partial(_chase_kernel, steps=steps),
+        kernel,
         grid=(1,),
-        in_specs=[pl.BlockSpec((n,), lambda i: (0,)),
-                  pl.BlockSpec((1,), lambda i: (0,))],
+        in_specs=chase_in_specs(n, memory_space),
         out_specs=pl.BlockSpec((1,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        scratch_shapes=scratch,
         interpret=interpret,
     )(ring.astype(jnp.int32), start.astype(jnp.int32))
+
+
+def chase(ring: jax.Array, start: jax.Array, *, steps: int,
+          interpret: bool | None = None, memory_space: str | None = None,
+          vmem_budget: int | None = None) -> jax.Array:
+    """ring: [N] int32 single-cycle permutation; start: [1] int32.
+
+    ``memory_space=None`` selects the residency by ring footprint
+    (:func:`select_memory_space`); pass ``"vmem"`` / ``"any"`` to force a
+    path. Off-TPU both paths run under the Pallas interpreter.
+    """
+    interpret = use_interpret() if interpret is None else interpret
+    if memory_space is None:
+        memory_space = select_memory_space(ring.size * 4, vmem_budget)
+    return _chase(ring, start, steps=steps, interpret=interpret,
+                  memory_space=memory_space)

@@ -1,0 +1,316 @@
+"""In-kernel memory rows: chase residency policy, probe, plan, session, CLI.
+
+The load-bearing regression here is the residency contract: an over-VMEM ring
+must be handed to the kernel with ``memory_space=ANY`` (streaming from HBM),
+never BlockSpec-pinned into VMEM — the original ``kernels/chase.py`` pinned
+unconditionally, so the Fig. 6 analog silently measured VMEM.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro import inkernel
+from repro.api import MemoryChaseProbe, MemoryProbe, Plan, Session, cli, named_plan
+from repro.core import membench
+from repro.core.latency_db import LatencyDB
+from repro.core.timing import Timer
+from repro.kernels import chase as chase_mod
+from repro.kernels.chase import chase, chase_in_specs, select_memory_space
+
+
+# ------------------------------------------------------ residency regression
+def test_select_memory_space_by_footprint():
+    budget = chase_mod.VMEM_BUDGET_BYTES
+    assert select_memory_space(budget) == "vmem"
+    assert select_memory_space(budget + 1) == "any"
+    assert select_memory_space(64) == "vmem"
+    # explicit budget override (tests + small-core targets)
+    assert select_memory_space(8192, vmem_budget=4096) == "any"
+    assert select_memory_space(4096, vmem_budget=4096) == "vmem"
+
+
+def test_over_vmem_specs_are_not_blockspec_pinned():
+    """The bug fix: the 'any' ring spec must carry the ANY memory space and
+    no block shape — a shaped BlockSpec is exactly what DMA-pins the ring
+    into VMEM and turns the HBM probe into a VMEM one."""
+    any_spec = chase_in_specs(512, "any")[0]
+    assert any_spec.memory_space == pl.ANY
+    assert any_spec.block_shape is None
+
+    vmem_spec = chase_in_specs(512, "vmem")[0]
+    assert tuple(vmem_spec.block_shape) == (512,)
+
+    with pytest.raises(ValueError, match="memory_space"):
+        chase_in_specs(512, "hbm2")
+
+
+# ------------------------------------------------------ interpret-mode oracle
+def _single_cycle_ring(n, seed=3):
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(n)
+    ring = np.empty(n, np.int32)
+    ring[idx[:-1]] = idx[1:]
+    ring[idx[-1]] = idx[0]
+    return ring, int(idx[0])
+
+
+@pytest.mark.parametrize("memory_space", ["vmem", "any"])
+def test_chase_visits_every_ring_slot(memory_space):
+    """Both residencies walk the identical single cycle: after n steps the
+    chase is back at the start, and never earlier (so all n slots are hit)."""
+    n = 16
+    ring, start = _single_cycle_ring(n)
+    r, s = jnp.asarray(ring), jnp.asarray([start])
+    seen = set()
+    for k in range(1, n + 1):
+        p = int(chase(r, s, steps=k, interpret=True,
+                      memory_space=memory_space)[0])
+        assert (p == start) == (k == n)
+        seen.add(p)
+    assert seen == set(range(n))
+
+
+@pytest.mark.parametrize("memory_space", ["vmem", "any"])
+def test_chase_matches_host_oracle_on_padded_ring(memory_space):
+    """The line-padded build_ring drives the kernel exactly like the host
+    chase: positions are absolute indices into the padded array."""
+    from repro.kernels.ref import ref_chase
+
+    ring, start = membench.build_ring(1024, line_bytes=64)
+    for steps in (1, 7, 16):
+        out = chase(ring, start, steps=steps, interpret=True,
+                    memory_space=memory_space)
+        assert int(out[0]) == ref_chase(np.asarray(ring), 0, steps)
+
+
+def test_build_ring_line_padding():
+    ring, start = membench.build_ring(4096, line_bytes=64)
+    pad = 64 // 4
+    arr = np.asarray(ring)
+    assert arr.size == 4096 // 4 and int(start[0]) == 0
+    live = arr[::pad]
+    assert np.count_nonzero(arr) == np.count_nonzero(live)  # slots only
+    assert (live % pad == 0).all()  # values are padded absolute positions
+
+
+# ------------------------------------------------- slope + probe measurement
+def test_measure_chase_full_slope_exact_on_virtual_clock(monkeypatch):
+    """fn_by_len(steps) costing intercept + slope*steps must yield exactly
+    the per-load slope, with the residency actually used reported back."""
+    import repro.core.timing as timing
+
+    now = [0]
+    monkeypatch.setattr(timing.time, "perf_counter_ns", lambda: now[0])
+    SLOPE, INTERCEPT = 900, 70_000
+
+    def fake_chase(ring, start, *, steps, interpret=None, memory_space=None):
+        now[0] += INTERCEPT + SLOPE * steps
+        return start
+
+    monkeypatch.setattr(chase_mod, "chase", fake_chase)
+    m, space = inkernel.measure_chase_full(
+        8192, lens=(16, 48), timer=Timer(warmup=1, reps=3))
+    assert m.median_ns == pytest.approx(SLOPE)
+    assert m.mad_ns == 0.0
+    assert space == "vmem"
+    _, forced = inkernel.measure_chase_full(
+        8192, lens=(16, 48), timer=Timer(warmup=1, reps=3),
+        memory_space="any")
+    assert forced == "any"
+
+
+def test_probe_identity_and_fidelity_suffixes():
+    std = MemoryChaseProbe(65536)
+    assert std.op == "inkernel.mem.65536"
+    assert std.opt_level == "O3" and std.dtype == "int32"
+    assert std.category == "memory"
+    assert std.lens == tuple(inkernel.CHASE_LENS)
+    # non-default steps / line padding / a forced residency are different
+    # experiments: each must split the cache identity, never collide with
+    # the default-fidelity row
+    assert MemoryChaseProbe(65536, lens=(8, 24)).op == "inkernel.mem.65536.l8-24"
+    assert MemoryChaseProbe(65536, memory_space="any").op == "inkernel.mem.65536.any"
+    assert MemoryChaseProbe(65536, line_bytes=128).op == "inkernel.mem.65536.line128"
+    assert MemoryProbe(65536, line_bytes=128).op == "mem.chase.ws65536.line128"
+    assert (MemoryChaseProbe(65536, lens=(8, 24)).logical_key()
+            != std.logical_key())
+    assert (MemoryChaseProbe(65536, line_bytes=128).logical_key()
+            != std.logical_key())
+
+
+def test_match_names_mem_base_row():
+    ik = MemoryChaseProbe(8192)
+    assert ik.match_names() >= {"inkernel.mem.8192", "mem.chase.ws8192", "mem"}
+    host = MemoryProbe(8192)
+    assert host.match_names() >= {"mem.chase.ws8192", "mem"}
+    # exact-by-construction: neither answers to another working set
+    assert "mem.chase.ws4096" not in ik.match_names()
+
+
+def test_probe_record_persists_working_set_metadata(monkeypatch, tmp_path):
+    """Auto-selection above the budget runs the streaming path, and the
+    record round-trips per-load latency + working-set metadata."""
+    monkeypatch.setattr(chase_mod, "VMEM_BUDGET_BYTES", 4096)
+    probe = MemoryChaseProbe(16384, lens=(8, 24), reps=2)
+    result = Session(db=str(tmp_path / "db.json"),
+                     timer=Timer(warmup=0, reps=2)).run(Plan((probe,)))
+    rec = result.measured[0].record
+    assert rec.op == "inkernel.mem.16384.l8-24"
+    assert "space=any" in rec.notes  # over-budget ring streamed, not pinned
+    pt = membench.chasepoint_from_record(rec)
+    assert pt.working_set_bytes == 16384
+    assert pt.memory_space == "any"
+    assert pt.line_bytes == 64
+    assert pt.latency_ns == rec.latency_ns
+
+
+# --------------------------------------------------------------------- plan
+def test_plan_memory_inkernel_spans_vmem_boundary():
+    plan = Plan.memory_inkernel()
+    sizes = sorted(p.working_set_bytes for p in plan
+                   if isinstance(p, MemoryChaseProbe))
+    spaces = {select_memory_space(ws) for ws in sizes}
+    assert spaces == {"vmem", "any"}  # rungs on both sides of the boundary
+    # host pairing fills both sides of the comparison table
+    host_ws = sorted(p.working_set_bytes for p in plan
+                     if isinstance(p, MemoryProbe))
+    assert host_ws == sizes
+    solo = Plan.memory_inkernel(working_sets=(4096,), host_pair=False)
+    assert [p.op for p in solo] == ["inkernel.mem.4096"]
+
+
+def test_named_plan_memory_inkernel_and_full():
+    plan = named_plan("memory-inkernel")
+    assert plan.name == "memory-inkernel"
+    ops = {p.op for p in plan}
+    assert "inkernel.mem.65536" in ops and "mem.chase.ws65536" in ops
+    full_ops = {p.op for p in named_plan("full")}
+    assert "inkernel.mem.65536" in full_ops  # folded into full
+    keys = [p.logical_key() for p in named_plan("full")]
+    assert len(keys) == len(set(keys))  # dedupe holds across + composition
+
+
+def test_plan_filter_mem_base_row_keeps_memory_family():
+    plan = named_plan("full").filter(ops=["mem"])
+    assert len(plan) > 0
+    assert all(p.category == "memory" for p in plan)
+    kinds = {type(p) for p in plan}
+    assert {MemoryChaseProbe, MemoryProbe} <= kinds
+    # the host twin name keeps both sides of one rung, nothing else
+    rung = named_plan("memory-inkernel").filter(ops=["mem.chase.ws65536"])
+    assert {p.op for p in rung} == {"inkernel.mem.65536", "mem.chase.ws65536"}
+
+
+# ------------------------------------------------- session cache/resume + DB
+def _tiny_plan():
+    return Plan((MemoryChaseProbe(4096, lens=(8, 24), reps=2),
+                 MemoryChaseProbe(16384, lens=(8, 24), reps=2)))
+
+
+def test_session_cache_resume_roundtrip(tmp_path):
+    db = tmp_path / "db.json"
+    first = Session(db=str(db), timer=Timer(warmup=0, reps=2)).run(_tiny_plan())
+    assert first.summary().startswith("2 measured")
+    assert all("ws=" in r.record.notes for r in first.measured)
+    second = Session(db=str(db), timer=Timer(warmup=0, reps=2)).run(_tiny_plan())
+    assert second.summary().startswith("0 measured, 2 cached")
+    # cached records identical to what was measured (full round-trip)
+    assert ([r.record for r in second.cached]
+            == [r.record for r in first.measured])
+
+
+def test_latency_db_merge_over_inkernel_mem_records(tmp_path):
+    import dataclasses
+
+    db = tmp_path / "db.json"
+    res = Session(db=str(db), timer=Timer(warmup=0, reps=2)).run(_tiny_plan())
+    rec = res.measured[0].record
+    newer = dataclasses.replace(rec, latency_ns=123.0,
+                                measured_at="9999-01-01T00:00:00")
+    other = LatencyDB()
+    other.add(newer)
+    merged = LatencyDB(str(db)).merge(other)
+    assert merged.get(rec.key()).latency_ns == 123.0  # newest wins
+    older = dataclasses.replace(rec, latency_ns=7.0, measured_at="1970-01-01")
+    loser = LatencyDB()
+    loser.add(older)
+    assert merged.merge(loser).get(rec.key()).latency_ns == 123.0
+
+
+def test_fan_out_shard_smoke_includes_memory_probes(tmp_path):
+    plan = _tiny_plan() + Plan((MemoryProbe(4096, steps=(64, 192)),))
+    session = Session(db=str(tmp_path / "db.json"),
+                      timer=Timer(warmup=0, reps=2))
+    result = session.fan_out(plan, devices=[None, None])
+    assert len(result.results) == 3 and not result.failed
+    assert {r.record.op for r in result.measured} == {
+        "inkernel.mem.4096.l8-24", "inkernel.mem.16384.l8-24",
+        "mem.chase.ws4096.s64-192"}
+    again = session.fan_out(plan, devices=[None, None])
+    assert len(again.cached) == 3  # merged shard DBs resume as cache hits
+
+
+# ------------------------------------------------------------ compare table
+def test_compare_markdown_pairs_host_and_inkernel_rows(tmp_path):
+    plan = Plan((MemoryChaseProbe(4096, reps=2),
+                 MemoryChaseProbe(4096, lens=(8, 24), reps=2),
+                 MemoryProbe(4096)))
+    session = Session(db=str(tmp_path / "db.json"),
+                      timer=Timer(warmup=0, reps=2))
+    session.run(plan)
+    md = session.db.compare_markdown()
+    row = next((l for l in md.splitlines() if "mem.chase.ws4096" in l), None)
+    assert row is not None, md
+    assert "memory" in row
+    # fidelity-suffixed variants are a different experiment: never paired
+    assert "l8-24" not in md
+
+
+def test_compare_markdown_orders_ladder_numerically(tmp_path):
+    import dataclasses
+
+    session = Session(db=LatencyDB(), timer=Timer(warmup=0, reps=2))
+    res = session.run(Plan((MemoryChaseProbe(4096, reps=2, lens=(8, 24)),)))
+    base = res.measured[0].record
+    db = LatencyDB()
+    for ws in (65536, 4096, 1048576):
+        db.add(dataclasses.replace(base, op=f"inkernel.mem.{ws}"))
+        db.add(dataclasses.replace(base, op=f"mem.chase.ws{ws}"))
+    md = db.compare_markdown()
+    order = [int(l.split("ws")[1].split(" ")[0]) for l in md.splitlines()
+             if "mem.chase.ws" in l]
+    assert order == [4096, 65536, 1048576]
+
+
+# ---------------------------------------------------------------------- CLI
+CLI_OPS = "inkernel.mem.65536,mem.chase.ws65536,inkernel.mem.262144"
+
+
+def test_cli_memory_inkernel_plan_and_table(tmp_path, capsys):
+    db = tmp_path / "db.json"
+    args = ["characterize", "--plan", "memory-inkernel", "--ops", CLI_OPS,
+            "--reps", "2", "--warmup", "0", "--db", str(db)]
+    rc = cli.main(args + ["--table"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    # 2 in-kernel rungs + the ws65536 host twin (kept via the twin name;
+    # filtering by a derived inkernel.* name keeps only that side, like the
+    # op-chain rows)
+    assert "3 measured, 0 cached, 0 failed" in out
+    assert "inkernel.mem.65536" in out
+    assert "in-kernel/dispatch" in out  # pairing table rendered
+
+    blob = json.loads(db.read_text())
+    ops = {r["op"] for r in blob["records"]}
+    assert {"inkernel.mem.65536", "inkernel.mem.262144",
+            "mem.chase.ws65536"} == ops
+    assert all("ws=" in r["notes"] for r in blob["records"]
+               if r["op"].startswith("inkernel.mem."))
+
+    rc = cli.main(args)  # resume: same command is pure cache hits
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 measured, 3 cached, 0 failed" in out
