@@ -1,0 +1,81 @@
+"""CI gate: serving prediction error within the checked-in tolerance baseline.
+
+Reads the ``serving.*`` rows of a LatencyDB (written by ``python -m repro
+characterize --plan serving``), recomputes each cell's
+``|log10(predicted/measured)|`` and coverage, and fails if any cell violates
+``benchmarks/serving_tolerance.json``. The paper's validation loop, made a
+regression gate: the measured tables must keep predicting the real serving
+program to within the recorded band.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_serving --db /tmp/serving_db.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Sequence
+
+from repro.core import perfmodel
+from repro.core.latency_db import LatencyDB
+
+DEFAULT_TOLERANCE = os.path.join(os.path.dirname(__file__),
+                                 "serving_tolerance.json")
+
+
+def check_points(points: Sequence[perfmodel.ServingPoint],
+                 tolerance: dict) -> list[str]:
+    """Violation messages for ``points`` against a tolerance baseline."""
+    max_err = float(tolerance["max_abs_log10_ratio"])
+    min_cov = float(tolerance.get("min_coverage", 0.0))
+    violations = []
+    for pt in points:
+        cell = f"serving.{pt.phase}.b{pt.batch}p{pt.prompt_len}"
+        err = pt.abs_log10_error
+        if err > max_err:
+            violations.append(
+                f"{cell}: |log10(pred/meas)| = {err:.2f} > {max_err:.2f} "
+                f"(predicted {pt.predicted_ns:.0f}ns, "
+                f"measured {pt.measured_ns:.0f}ns)")
+        if pt.coverage < min_cov:
+            violations.append(
+                f"{cell}: coverage {pt.coverage:.2f} < {min_cov:.2f} "
+                "(estimator priced too little of the module from the DB)")
+    return violations
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--db", required=True, help="LatencyDB JSON path")
+    ap.add_argument("--tolerance", default=DEFAULT_TOLERANCE,
+                    help="tolerance baseline JSON (default: checked-in)")
+    args = ap.parse_args(argv)
+
+    with open(args.tolerance) as f:
+        tolerance = json.load(f)
+    db = LatencyDB(args.db)
+    points = [perfmodel.servingpoint_from_record(r) for r in db.records()
+              if r.op.startswith("serving.")]
+    if not points:
+        print(f"error: no serving.* rows in {args.db} — "
+              "run --plan serving first", file=sys.stderr)
+        return 2
+    for pt in sorted(points, key=lambda p: (p.phase, p.batch, p.prompt_len)):
+        print(f"serving.{pt.phase}.b{pt.batch}p{pt.prompt_len}: "
+              f"predicted={pt.predicted_ns:.0f}ns measured={pt.measured_ns:.0f}ns "
+              f"|log10 err|={pt.abs_log10_error:.2f} coverage={pt.coverage:.2f}")
+    violations = check_points(points, tolerance)
+    for v in violations:
+        print(f"VIOLATION: {v}", file=sys.stderr)
+    if not violations:
+        print(f"{len(points)} cell(s) within tolerance "
+              f"(max |log10 err| {tolerance['max_abs_log10_ratio']}, "
+              f"min coverage {tolerance.get('min_coverage', 0.0)})")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

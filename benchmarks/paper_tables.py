@@ -8,6 +8,7 @@ Paper artifact -> bench:
   Table IV shared/constant memory analog        -> bench_onchip_memory
   Fig. 3  in-pipeline vs dispatch sampling      -> bench_inkernel_vs_dispatch
   Table IV + Fig. 6 in-kernel memory ladder     -> bench_inkernel_memory
+  (Section I purpose) serving predicted-vs-meas -> bench_serving_cost
   (framework) attention/kernel-path comparison  -> bench_attention_impls
   (framework) sharded vs serial fan-out scaling -> bench_fanout_scaling
   (deliverable g) roofline table from dry-runs  -> bench_roofline
@@ -248,6 +249,36 @@ def bench_inkernel_vs_dispatch(timer: Timer, quick: bool = False
             med = float(np.median([r.latency_ns for r in recs]))
             rows.append((f"inkernel.{cat}.median", med / 1e3,
                          f"{len(recs)} ops in-kernel (paper Fig. 3 method)"))
+    return rows
+
+
+# ------------------------------------------- serving predicted vs measured
+def bench_serving_cost(timer: Timer, quick: bool = False
+                       ) -> list[tuple[str, float, str]]:
+    """Serving-path characterization (docs/serving.md): the Engine's prefill
+    and decode-step HLO priced from the measured LatencyDB vs its wall
+    clock, per (batch, prompt_len) cell. The paper's stated purpose made a
+    bench: measured tables feeding a performance model of a real program."""
+    from repro.api.plan import SERVING_CELLS
+
+    cells = SERVING_CELLS[:1] if quick else SERVING_CELLS
+    session = Session(db=f"{RESULTS}/latency_db.json", timer=timer)
+    result = session.run(Plan.serving(cells=cells), force=True)
+    db = session.db
+    with open(f"{RESULTS}/serving_cost.md", "w") as f:
+        f.write(db.compare_markdown(prefix="serving."))
+    points = sorted(
+        (perfmodel.servingpoint_from_record(r) for r in result.records()
+         if r.op.startswith("serving.")),
+        key=lambda p: (p.phase, p.batch, p.prompt_len))
+    dump_json({"cells": [vars(p) for p in points]},
+              f"{RESULTS}/serving_cost.json")
+    rows = []
+    for p in points:
+        rows.append((f"serving.{p.phase}.b{p.batch}p{p.prompt_len}",
+                     p.measured_ns / 1e3,
+                     f"predicted={p.predicted_ns:.0f}ns ratio={p.ratio:.3f} "
+                     f"coverage={p.coverage:.2f} (perfmodel x LatencyDB)"))
     return rows
 
 

@@ -33,6 +33,7 @@ def main() -> None:
         "onchip": lambda t: pt.bench_onchip_memory(t),
         "inkernel": lambda t: pt.bench_inkernel_vs_dispatch(t, quick=args.quick),
         "inkernel_memory": lambda t: pt.bench_inkernel_memory(t, quick=args.quick),
+        "serving_cost": lambda t: pt.bench_serving_cost(t, quick=args.quick),
         "fanout": lambda t: pt.bench_fanout_scaling(t, quick=args.quick),
         "attention": lambda t: pt.bench_attention_impls(t),
         "roofline": lambda t: pt.bench_roofline(t),

@@ -74,8 +74,10 @@ def main() -> None:
               for s in ((64, 256), (256, 1024), (1024, 256))]
     hlo = jax.jit(mlp).lower(*shapes).compile().as_text()
     est = perfmodel.HloLatencyEstimator(db)
-    print(f"\nHLO-priced mlp latency estimate: {est.estimate_ns(hlo):.0f} ns "
+    ns = est.estimate_ns(hlo)
+    print(f"\nHLO-priced mlp latency estimate: {ns:.0f} ns "
           f"(from {len(db)} measured records)")
+    print(f"  {ns.report.summary()}")   # coverage + compute/memory split
 
 
 if __name__ == "__main__":

@@ -16,20 +16,23 @@ that pipeline as an API:
 * :class:`ResultSet` — per-probe outcomes plus report helpers.
 
 CLI: ``python -m repro characterize --plan
-quick|table2|memory|inkernel|memory-inkernel|full [--shard auto|N]``.
+quick|table2|memory|inkernel|memory-inkernel|serving|full [--shard auto|N]``.
 The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
 ``membench.sweep``) are deprecation shims over this package.
 """
-from repro.api.plan import PLAN_NAMES, QUICK_OPS, Plan, named_plan
+from repro.api.plan import (PLAN_NAMES, QUICK_OPS, SERVING_CELLS, Plan,
+                            named_plan)
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
                               KernelChainProbe, KernelProbe,
                               MemoryChaseProbe, MemoryProbe, Probe,
-                              ProbeContext)
+                              ProbeContext, ServingCostProbe,
+                              serving_tiny_config)
 from repro.api.session import ProbeResult, ResultSet, Session
 
 __all__ = [
-    "PLAN_NAMES", "QUICK_OPS", "Plan", "named_plan",
+    "PLAN_NAMES", "QUICK_OPS", "SERVING_CELLS", "Plan", "named_plan",
     "ClockOverheadProbe", "InstructionProbe", "KernelChainProbe",
     "KernelProbe", "MemoryChaseProbe", "MemoryProbe", "Probe",
     "ProbeContext", "ProbeResult", "ResultSet", "Session",
+    "ServingCostProbe", "serving_tiny_config",
 ]

@@ -8,6 +8,7 @@ Examples::
     python -m repro characterize --plan table2 --ops add,mul --table
     python -m repro characterize --plan inkernel --table   # in-pipeline probes
     python -m repro characterize --plan memory-inkernel --table  # VMEM/HBM ladder
+    python -m repro characterize --plan serving --table  # predicted vs measured
     python -m repro characterize --plan full --shard auto  # one shard per device
     python -m repro characterize --plan table2 --shard 4   # first 4 devices
 
@@ -151,6 +152,10 @@ def cmd_characterize(args: argparse.Namespace) -> int:
         if compare.count("\n") > 1:  # header + separator + >=1 paired row
             print("\n== host vs in-kernel (paper's in-pipeline method) ==")
             print(compare)
+        serving = session.db.compare_markdown(prefix="serving.")
+        if serving.count("\n") > 1:
+            print("\n== serving predicted vs measured (LatencyDB x perfmodel) ==")
+            print(serving)
     return 1 if result.failed else 0
 
 

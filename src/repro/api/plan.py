@@ -7,8 +7,8 @@ them — so "the full paper reproduction" is one Plan expression, and CI's
 quick pass is the same expression with a keep-set applied.
 
 Named plans (``quick`` / ``table2`` / ``memory`` / ``inkernel`` /
-``memory-inkernel`` / ``full``) back the ``python -m repro characterize
---plan`` CLI.
+``memory-inkernel`` / ``serving`` / ``full``) back the ``python -m repro
+characterize --plan`` CLI.
 """
 from __future__ import annotations
 
@@ -21,7 +21,8 @@ from repro.core.optlevels import OPT_LEVELS
 
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
                               KernelChainProbe, KernelProbe,
-                              MemoryChaseProbe, MemoryProbe, Probe)
+                              MemoryChaseProbe, MemoryProbe, Probe,
+                              ServingCostProbe)
 
 # The CLI/CI keep-set: one representative per interesting latency class,
 # including the divisor-taxonomy splits the paper highlights.
@@ -30,7 +31,12 @@ QUICK_OPS = ("add", "mul", "mad", "div.s.regular", "div.s.irregular",
              "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16")
 
 PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "memory-inkernel",
-              "full")
+              "serving", "full")
+
+# Representative (batch, prompt_len) serving cells: a single-sequence short
+# prompt and a batched longer one — enough to expose both phases' scaling
+# while staying CI-cheap on the tiny default model.
+SERVING_CELLS = ((1, 16), (2, 64))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +165,29 @@ class Plan:
         return Plan(_dedupe(tuple(probes)), name="memory-inkernel")
 
     @staticmethod
+    def serving(cells: Sequence[tuple[int, int]] = SERVING_CELLS,
+                phases: Sequence[str] = ("prefill", "decode"),
+                cfg=None, rt=None, with_deps: bool = True) -> "Plan":
+        """Serving-path characterization: one :class:`ServingCostProbe` per
+        ``(batch, prompt_len)`` cell and phase, preceded (by default) by the
+        instruction rows and memory rungs the estimator prices against —
+        plan order is execution order, so by the time a serving cell runs,
+        its pricing inputs are in the DB and the prediction is
+        measurement-backed instead of ``default_ns``-backed.
+        """
+        probes: list[Probe] = []
+        if with_deps:
+            probes += list(Plan.instructions(ops=QUICK_OPS,
+                                             opt_levels=("O3",)))
+            # default-fidelity rungs: a step-suffixed row (quick's 512-1536)
+            # is a different experiment that memory_ladder() rightly ignores,
+            # and a ladder the estimator can't read prices nothing
+            probes += list(Plan.memory((1 << 13, 1 << 17, 1 << 21)))
+        probes += [ServingCostProbe(phase, b, p, cfg=cfg, rt=rt)
+                   for b, p in cells for phase in phases]
+        return Plan(_dedupe(tuple(probes)), name="serving")
+
+    @staticmethod
     def inkernel(registry: Sequence[OpSpec] | None = None,
                  ops: Iterable[str] | None = None,
                  categories: Iterable[str] | None = None,
@@ -210,7 +239,7 @@ def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
 
 def named_plan(name: str) -> Plan:
     """The CLI's plan registry.
-    quick | table2 | memory | inkernel | memory-inkernel | full."""
+    quick | table2 | memory | inkernel | memory-inkernel | serving | full."""
     if name == "quick":
         plan = (Plan.clock_overhead(("O0", "O3"))
                 + Plan.instructions(ops=QUICK_OPS, opt_levels=("O0", "O3"))
@@ -225,13 +254,18 @@ def named_plan(name: str) -> Plan:
         plan = Plan.inkernel()
     elif name == "memory-inkernel":
         plan = Plan.memory_inkernel()
+    elif name == "serving":
+        plan = Plan.serving()
     elif name == "full":
+        # serving last and dep-free: the full sweep's own instruction +
+        # memory rows are the estimator's pricing inputs
         plan = (Plan.clock_overhead(OPT_LEVELS)
                 + Plan.instructions(opt_levels=OPT_LEVELS)
                 + Plan.memory()
                 + Plan.kernels(("fma", "add", "rsqrt"))
                 + Plan.inkernel()
-                + Plan.memory_inkernel())
+                + Plan.memory_inkernel()
+                + Plan.serving(with_deps=False))
     else:
         raise ValueError(f"unknown plan {name!r}; choose from {PLAN_NAMES}")
     return dataclasses.replace(plan, name=name)

@@ -23,6 +23,9 @@ Concrete probes wrap the existing measurement machinery:
   one working-set size, VMEM-resident below the footprint budget and
   HBM-streaming (``memory_space=ANY``) above — the in-kernel Table IV /
   Fig. 6 analog, one probe per ladder rung.
+* :class:`ServingCostProbe` — the consumer side: one serving-engine
+  prefill/decode cell, priced with the estimator against the session DB and
+  wall-clock measured, predicted-vs-measured in one record (docs/serving.md).
 
 New probe types (energy counters, occupancy sweeps, ...) subclass
 :class:`Probe` and immediately gain caching, resumability and structured
@@ -31,6 +34,7 @@ failure handling from the session scheduler.
 from __future__ import annotations
 
 import dataclasses
+import os
 import weakref
 from typing import Any, Callable, Mapping
 
@@ -50,6 +54,9 @@ class ProbeContext:
     clock_hz: float
     baseline_ns: Callable[[str], float]  # per-level 1-cycle-class baseline
     device: Any = None                   # session's pinned jax device (None = default)
+    db: Any = None                       # session's LatencyDB — lets consumer
+                                         # probes (ServingCostProbe) price
+                                         # against already-measured rows
 
 
 class Probe:
@@ -384,3 +391,108 @@ class MemoryChaseProbe(Probe):
             ctx, m, notes=f"pallas chase ws={self.working_set_bytes} "
                           f"line={self.line_bytes} space={space} "
                           f"lens={self.lens[0]}-{self.lens[1]}")
+
+
+def serving_tiny_config():
+    """The default model the serving cells characterize: small enough for CI
+    wall clocks, deep enough (2 scanned periods) that the decode-step HLO
+    carries a real ``known_trip_count`` for the estimator's rollup."""
+    from repro.models.config import ModelConfig, Runtime
+
+    cfg = ModelConfig(name="serving-tiny", family="dense", n_layers=2,
+                      d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                      vocab_size=128, param_dtype="float32",
+                      compute_dtype="float32")
+    rt = Runtime(remat=False, xent_chunk=16, moe_groups=1)
+    return cfg, rt
+
+
+class ServingCostProbe(Probe):
+    """Price + measure one serving cell: the Engine's prefill or decode-step
+    HLO at ``(batch, prompt_len)`` — where the measurement side of the repo
+    (LatencyDB) meets the model side (perfmodel), the paper's stated purpose.
+
+    The probe lowers :meth:`repro.serving.Engine.lower_prefill` /
+    :meth:`~repro.serving.Engine.lower_decode` at the cell, prices the
+    optimized HLO with :class:`~repro.core.perfmodel.HloLatencyEstimator`
+    against the session's DB (environment-filtered: rows from other
+    devices/jax versions never price this cell), then times the compiled
+    executable. The record's ``latency_ns`` is the **measured** wall clock;
+    the prediction and its :class:`~repro.core.perfmodel.PricedReport`
+    digest (coverage, compute/memory split) ride in the notes and are parsed
+    back by :func:`~repro.core.perfmodel.servingpoint_from_record`.
+
+    Op names ``serving.prefill.b<B>p<L>`` / ``serving.decode.b<B>p<L>``;
+    ``opt_level`` pinned to ``"O3"`` (a lowered executable is always fully
+    compiled). A non-default model config is a different experiment and
+    suffixes the cache identity with its name, like ``MemoryProbe.steps``.
+    """
+
+    category = "serving"
+
+    def __init__(self, phase: str, batch: int, prompt_len: int,
+                 cfg=None, rt=None, max_len: int | None = None, reps: int = 5):
+        if phase not in ("prefill", "decode"):
+            raise ValueError(f"phase must be prefill|decode, got {phase!r}")
+        default_cfg, default_rt = serving_tiny_config()
+        self.phase = phase
+        self.batch = int(batch)
+        self.prompt_len = int(prompt_len)
+        self.cfg = cfg if cfg is not None else default_cfg
+        self.rt = rt if rt is not None else default_rt
+        self.max_len = max_len
+        self.reps = reps
+        self.opt_level = "O3"
+        self.dtype = self.cfg.compute_dtype
+        self.base_op = f"serving.{phase}.b{self.batch}p{self.prompt_len}"
+        self.op = self.base_op
+        if max_len is not None:
+            # a non-default decode cache size is a different experiment
+            # (different HLO), so it suffixes the cache identity like
+            # MemoryProbe.steps
+            self.op += f".c{int(max_len)}"
+        if self.cfg.name != default_cfg.name:
+            self.op += f".{self.cfg.name}"
+
+    def match_names(self) -> frozenset[str]:
+        # addressable by the full cell name, the phase family
+        # (``--ops serving.decode``) and the whole-family row ``serving``
+        return frozenset((self.op, self.base_op,
+                          f"serving.{self.phase}", "serving"))
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        import jax
+
+        from repro.core.perfmodel import HloLatencyEstimator
+        from repro.models import transformer
+        from repro.serving.engine import Engine
+
+        params = transformer.init_lm(jax.random.PRNGKey(0), self.cfg)
+        eng = Engine(params, self.cfg, self.rt)
+        if self.phase == "prefill":
+            lowered, args = eng.lower_prefill(self.batch, self.prompt_len)
+        else:
+            lowered, args = eng.lower_decode(self.batch, self.prompt_len,
+                                             self.max_len)
+        compiled = lowered.compile()
+        if ctx.db is not None and getattr(ctx.db, "path", None):
+            # sharded runs (Session.fan_out) give each device its own DB
+            # copy; sibling shards flush their dep rows to the shared path
+            # after every probe, so pick those up before pricing instead of
+            # falling back to default_ns for rows another shard measured
+            from repro.core.latency_db import LatencyDB
+
+            if os.path.exists(ctx.db.path):
+                ctx.db.merge(LatencyDB(ctx.db.path))
+        est = HloLatencyEstimator(ctx.db, opt_level=self.opt_level,
+                                  filters=dict(ctx.env))
+        report = est.estimate(compiled.as_text())
+        m = ctx.timer.time_callable(compiled, *args, reps=self.reps)
+        notes = (f"phase={self.phase} batch={self.batch} "
+                 f"prompt={self.prompt_len} model={self.cfg.name} "
+                 f"predicted_ns={report.total_ns:.3f} "
+                 f"compute_ns={report.compute_ns:.3f} "
+                 f"memory_ns={report.memory_ns:.3f} "
+                 f"coverage={report.coverage:.4f} "
+                 f"bound={report.bound}")
+        return self._record(ctx, m, notes=notes)

@@ -177,7 +177,7 @@ class Session:
                             clock_hz=self.timer.calibrate_clock_hz(),
                             baseline_ns=lambda lv: self.baseline_ns(
                                 lv, use_db=not force),
-                            device=self.device)
+                            device=self.device, db=self.db)
 
     # ------------------------------------------------------------ execution
     def run(self, plan: Plan, force: bool | None = None) -> ResultSet:

@@ -192,6 +192,7 @@ class ModuleCost:
         mp = re.search(r"num_partitions=(\d+)", hlo_text)
         self.num_partitions = int(mp.group(1)) if mp else 1
         self._memo: dict[tuple[str, bool], StaticCost] = {}
+        self._exec_memo: tuple[dict[str, float], set[str]] | None = None
 
     # ------------------------------------------------------------------ ops
     def _dot_flops(self, comp: Computation, op: OpLine) -> float:
@@ -358,16 +359,20 @@ class ModuleCost:
         return self.comp_cost("__entry__")
 
     # -------------------------------------------------------------- insight
-    def breakdown(self, top: int = 12) -> dict[str, list]:
-        """Where do the bytes/flops go? Executions-weighted per-op-kind and
-        per-computation ranking — the §Perf iteration's 'profile'."""
-        by_kind_bytes: dict[str, float] = {}
-        by_kind_flops: dict[str, float] = {}
+    def _execution_counts(self) -> tuple[dict[str, float], set[str]]:
+        """Dynamic executions per computation, rolled down the call graph.
+
+        Returns ``(execs, fused)``: how many times each computation runs per
+        entry invocation (while bodies x ``known_trip_count``), and which
+        computations only ever run inside a fusion (their HBM bytes are
+        free). Fixpoint passes; call graphs here are shallow. Memoized: an
+        estimator call walks the graph for the histogram, the flops profile
+        and the byte rollup, and the counts never change.
+        """
+        if self._exec_memo is not None:
+            return self._exec_memo
         execs: dict[str, float] = {"__entry__": 1.0}
         fused: set[str] = set()
-
-        # propagate execution counts down the call graph (fixpoint passes;
-        # call graphs here are shallow)
         for _ in range(8):
             changed = False
             for name, comp in self.comps.items():
@@ -386,7 +391,13 @@ class ModuleCost:
                             changed = True
             if not changed:
                 break
+        self._exec_memo = (execs, fused)
+        return self._exec_memo
 
+    def _walk_dynamic(self):
+        """Yield ``(comp, op, executions, in_fusion)`` for every op line,
+        weighted by the call-graph execution counts (entry aliases skipped)."""
+        execs, fused = self._execution_counts()
         entry = self.comps.get("__entry__")
         for name, comp in self.comps.items():
             if comp is entry and name != "__entry__":
@@ -396,12 +407,45 @@ class ModuleCost:
                 continue
             in_fusion = name in fused
             for op in comp.ops:
-                c = self._op_cost(comp, op, in_fusion=in_fusion)
-                by_kind_bytes[op.opcode] = by_kind_bytes.get(op.opcode, 0.0) + c.bytes * e
-                by_kind_flops[op.opcode] = by_kind_flops.get(op.opcode, 0.0) + c.flops * e
+                yield comp, op, e, in_fusion
+
+    def breakdown(self, top: int = 12) -> dict[str, list]:
+        """Where do the bytes/flops go? Executions-weighted per-op-kind and
+        per-computation ranking — the §Perf iteration's 'profile'."""
+        by_kind_bytes: dict[str, float] = {}
+        by_kind_flops: dict[str, float] = {}
+        for comp, op, e, in_fusion in self._walk_dynamic():
+            c = self._op_cost(comp, op, in_fusion=in_fusion)
+            by_kind_bytes[op.opcode] = by_kind_bytes.get(op.opcode, 0.0) + c.bytes * e
+            by_kind_flops[op.opcode] = by_kind_flops.get(op.opcode, 0.0) + c.flops * e
         rank_b = sorted(by_kind_bytes.items(), key=lambda kv: -kv[1])[:top]
         rank_f = sorted(by_kind_flops.items(), key=lambda kv: -kv[1])[:top]
         return {"bytes_by_opcode": rank_b, "flops_by_opcode": rank_f}
+
+    def dynamic_histogram(self) -> dict[tuple[str, int], float]:
+        """Dynamic op counts: ``{(opcode, result elements): executions}``.
+
+        The trip-count-aware analog of :func:`op_histogram` — an op inside a
+        while body with ``known_trip_count n`` counts ``n`` times, nested
+        loops multiply. This is what makes decode-step pricing see every
+        layer of a scanned stack instead of one (the flat histogram's
+        underpricing bug).
+        """
+        hist: dict[tuple[str, int], float] = {}
+        for _, op, e, _ in self._walk_dynamic():
+            key = (op.opcode, _shape_info(op.result_type)[0])
+            hist[key] = hist.get(key, 0.0) + e
+        return hist
+
+    def dynamic_flops(self) -> dict[str, float]:
+        """Executions-weighted FLOPs per opcode (dot FLOPs use contracting
+        dims, matching :meth:`total`); feeds matmul pricing in perfmodel."""
+        out: dict[str, float] = {}
+        for comp, op, e, in_fusion in self._walk_dynamic():
+            f = self._op_cost(comp, op, in_fusion=in_fusion).flops
+            if f:
+                out[op.opcode] = out.get(op.opcode, 0.0) + f * e
+        return out
 
 
 def static_cost(hlo_text: str) -> StaticCost:
@@ -431,13 +475,46 @@ def collective_summary(hlo_text: str) -> dict[str, dict[str, float]]:
 HLO_TO_TABLE = {
     "add": "add.float32", "subtract": "sub.float32", "multiply": "mul.float32",
     "divide": "div.runtime.float32", "maximum": "max.float32", "minimum": "min.float32",
-    "exponential": "ex2", "log": "lg2", "tanh": "tanh", "rsqrt": "rsqrt",
+    "exponential": "ex2", "exponential-minus-one": "ex2", "log": "lg2",
+    "log-plus-one": "lg2", "tanh": "tanh", "rsqrt": "rsqrt",
     "sqrt": "sqrt", "sine": "sin", "cosine": "cos", "abs": "abs", "negate": "sub",
     "and": "and", "or": "or", "xor": "xor", "not": "not",
     "shift-left": "shl", "shift-right-logical": "shr", "shift-right-arithmetic": "shr",
     "popcnt": "popc", "count-leading-zeros": "clz", "remainder": "rem.s",
     "power": "ex2", "logistic": "tanh",
 }
+
+# Opcodes that are bookkeeping/data-movement, not issued arithmetic: excluded
+# from the estimator's coverage denominator (an unmapped `multiply` lowers
+# coverage; an unmapped `get-tuple-element` must not). Memory traffic they
+# cause is captured by the byte rollup, i.e. the estimator's memory term.
+# `custom-call` is deliberately NOT here: it is an opaque library/Pallas
+# kernel of unknown — often dominant — cost, so it must count against
+# coverage and show up in unpriced_opcodes rather than vanish.
+STRUCTURAL_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "copy",
+    "copy-start", "copy-done", "reshape", "transpose", "broadcast", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad", "iota",
+    "reverse", "after-all", "domain", "get-dimension-size",
+    "optimization-barrier", "send", "recv", "send-done", "recv-done",
+    "infeed", "outfeed", "partition-id", "replica-id", "fusion", "while",
+    "call", "conditional", "map", "async-start", "async-done",
+    "async-update", "rng-get-and-update-state",
+})
+
+
+def dynamic_op_histogram(hlo_text: str) -> Counter:
+    """Trip-count-aware counts of (opcode, result elements).
+
+    Unlike :func:`op_histogram` (flat: every op line counts once), ops inside
+    ``while`` bodies are weighted by ``known_trip_count`` — the dynamic
+    instruction counts a PPT-GPU-style consumer needs. Counts are floats
+    (conditional branches and unrooted computations may contribute 0).
+    """
+    hist: Counter = Counter()
+    for key, e in ModuleCost(hlo_text).dynamic_histogram().items():
+        hist[key] += e
+    return hist
 
 
 def op_histogram(hlo_text: str) -> Counter:

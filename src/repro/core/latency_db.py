@@ -20,7 +20,8 @@ except ImportError:  # pragma: no cover - non-POSIX host
 
 import jax
 
-from repro.utils import dump_json, load_json, logger, markdown_table, timestamp
+from repro.utils import (dump_json, load_json, logger, markdown_table,
+                         parse_kv_notes, timestamp)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,9 +331,43 @@ class LatencyDB:
         return tuple(int(p) if p.isdigit() else p
                      for p in re.split(r"(\d+)", op))
 
+    def _serving_markdown(self, opt_level: str) -> str:
+        """Predicted-vs-measured over the ``serving.*`` rows.
+
+        Each row is self-paired: the ``ServingCostProbe`` persists the
+        estimator's prediction (and its coverage diagnosis) in the record's
+        notes next to the measured wall clock, so the table needs no
+        cross-record twin lookup. Rows sort by environment then cell
+        (numerically: b2p64 after b2p16, not lexically).
+        """
+        rows = []
+        recs = sorted(
+            (r for r in self._records.values()
+             if r.op.startswith("serving.") and r.opt_level == opt_level),
+            key=lambda r: (r.device_kind, r.backend, r.jax_version,
+                           self._natural(r.op)))
+        for r in recs:
+            kv = parse_kv_notes(r.notes)
+            pred = float(kv.get("predicted_ns", 0.0))
+            meas = r.latency_ns
+            ratio = f"{pred / meas:.3f}" if meas > 0 else "—"
+            cov = kv.get("coverage", "—")
+            rows.append([r.op, kv.get("phase", "—"), kv.get("batch", "—"),
+                         kv.get("prompt", "—"), kv.get("model", "—"),
+                         f"{pred:.0f}", f"{meas:.0f}", ratio, cov,
+                         kv.get("bound", "—")])
+        return markdown_table(
+            ["cell", "phase", "batch", "prompt", "model", "predicted (ns)",
+             "measured (ns)", "pred/meas", "coverage", "bound"], rows)
+
     def compare_markdown(self, prefix: str = "inkernel.",
                          opt_level: str = "O3") -> str:
         """Host-vs-in-kernel pairing: ops measured both ways, side by side.
+
+        ``prefix="serving."`` renders the serving-path pairing instead:
+        predicted (estimator over the cell's lowered HLO) vs measured
+        (wall clock of the compiled executable), one row per
+        ``serving.<phase>.<cell>`` record — see :meth:`_serving_markdown`.
 
         Pairs every host-level record with its ``<prefix>``-named twin at the
         same dtype, opt level **and environment** — the DB accumulates runs
@@ -346,6 +381,8 @@ class LatencyDB:
         in-pipeline fraction of the host-level number — the launch/dispatch
         blur the paper's in-pipeline sampling removes.
         """
+        if prefix == "serving.":
+            return self._serving_markdown(opt_level)
         plain: dict[tuple, LatencyRecord] = {}
         inker: dict[tuple, LatencyRecord] = {}
         for r in self._records.values():

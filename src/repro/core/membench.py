@@ -27,7 +27,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.timing import Timer
-from repro.utils import logger
+from repro.utils import logger, parse_kv_notes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,7 +153,7 @@ def chasepoint_from_record(rec) -> ChasePoint:
     The probe encodes the working set in the op name and the residency /
     line-size metadata as ``key=value`` pairs in the notes field.
     """
-    fields = dict(kv.split("=", 1) for kv in rec.notes.split() if "=" in kv)
+    fields = parse_kv_notes(rec.notes)
     return ChasePoint(
         working_set_bytes=int(fields["ws"]),
         latency_ns=rec.latency_ns,

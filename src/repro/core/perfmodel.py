@@ -9,15 +9,23 @@ latencies make performance models like PPT-GPU accurate). Two models:
   probes) plus HLO-parsed collective traffic.
 * :class:`HloLatencyEstimator` — prices a lowered HLO module with *measured*
   per-op latencies from the LatencyDB: the simulator-feeding use case.
+  Dynamic (trip-count-rolled) instruction counts, a two-term
+  ``max(compute, memory)`` estimate whose memory term comes from the measured
+  pointer-chase ladder, and a :class:`PricedReport` diagnosis with an
+  explicit coverage fraction. :class:`ServingPoint` parses the
+  ``serving.<phase>.<cell>`` rows the ``repro.api.ServingCostProbe`` writes
+  (predicted-vs-measured, docs/serving.md).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import re
 from typing import Any
 
 from repro.core import hlo_analysis
-from repro.core.latency_db import LatencyDB
-from repro.utils import human_bytes, human_flops
+from repro.core.latency_db import LatencyDB, LatencyRecord
+from repro.utils import human_bytes, human_flops, parse_kv_notes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,32 +142,312 @@ class Roofline:
                   "bound", "useful", "roofline", "peak-mem/dev"]
 
 
+@dataclasses.dataclass(frozen=True)
+class ClassCost:
+    """One op-class row of a :class:`PricedReport` breakdown."""
+
+    ns: float = 0.0
+    instances: float = 0.0       # dynamic op instances (trip-count weighted)
+    elements: float = 0.0        # dynamic result elements across instances
+
+    def _plus(self, ns: float, instances: float, elements: float) -> "ClassCost":
+        return ClassCost(self.ns + ns, self.instances + instances,
+                         self.elements + elements)
+
+
+@dataclasses.dataclass(frozen=True)
+class PricedReport:
+    """Full diagnosis of one :meth:`HloLatencyEstimator.estimate` call.
+
+    ``total_ns = max(compute_ns, memory_ns)``: the serial-issue instruction
+    estimate and the measured-ladder memory estimate overlap on hardware, so
+    the slower term bounds the module (two-term roofline over measured rows).
+    ``coverage`` is the fraction of countable dynamic op instances priced
+    from an actual DB row — instances priced at ``default_ns`` (no mapping,
+    or mapping with no measured row) count against it, structural
+    data-movement ops (:data:`hlo_analysis.STRUCTURAL_OPS`) count in neither
+    direction.
+    """
+
+    total_ns: float
+    compute_ns: float
+    memory_ns: float
+    coverage: float
+    priced_instances: float
+    unpriced_instances: float
+    by_class: dict[str, ClassCost]
+    unpriced_opcodes: tuple[tuple[str, float], ...]   # (opcode, dyn count)
+    bytes_accessed: float
+    opt_level: str
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.compute_ns >= self.memory_ns else "memory"
+
+    def summary(self) -> str:
+        miss = ", ".join(f"{op}x{c:g}" for op, c in self.unpriced_opcodes[:4])
+        return (f"{self.total_ns:.1f}ns ({self.bound}-bound: "
+                f"comp={self.compute_ns:.1f} mem={self.memory_ns:.1f}), "
+                f"coverage={self.coverage:.1%}"
+                + (f", unpriced: {miss}" if miss else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryRung:
+    """One measured rung of the DB's pointer-chase ladder."""
+
+    working_set_bytes: int
+    ns_per_line: float
+    line_bytes: int
+    source: str                  # "inkernel" | "host"
+
+
+class _EstimatedNs(float):
+    """A float that carries its :class:`PricedReport` (see ``estimate_ns``)."""
+
+    report: PricedReport
+
+
+_MEM_ROW_RE = re.compile(r"^(?:mem\.chase\.ws|inkernel\.mem\.)(\d+)$")
+
+
 class HloLatencyEstimator:
     """Price a lowered HLO module from measured per-op latencies.
 
-    Serial-issue lower bound: Σ over op instances of table latency; elementwise
-    ops additionally amortize over vector width via a measured throughput
-    factor. This intentionally mirrors how PPT-GPU consumes the paper's tables
-    (latency per instruction × dynamic count).
+    The simulator-feeding use case (PPT-GPU-style): dynamic instruction
+    counts x measured table latencies. Counts are **trip-count aware**
+    (:meth:`hlo_analysis.ModuleCost.dynamic_histogram`): an op inside a
+    scanned layer stack counts once per iteration, so decode-step modules are
+    no longer underpriced by the layer count. The estimate has two terms:
+
+    * **compute**: Σ over dynamic op instances of ``issue latency +
+      (elements-1)/lanes x THROUGHPUT_FACTOR x latency`` — one issue plus
+      lane-amortized per-element throughput. ``dot``/``convolution`` price
+      their FLOPs/2 as fma-equivalents through the same formula. Opcodes with
+      no mapped or measured row are priced at ``default_ns`` and reported in
+      ``unpriced_opcodes`` instead of being silently skipped.
+    * **memory**: the module's rolled-up HBM bytes priced from the measured
+      pointer-chase ladder (``inkernel.mem.<N>`` preferred over the host twin
+      ``mem.chase.ws<N>``): the rung covering the module's footprint gives
+      ns/line, amortized over ``mem_streams`` concurrent streams (a dependent
+      chase measures pure latency; streamed traffic overlaps).
+
+    ``total = max(compute, memory)`` — the terms overlap in hardware.
     """
 
+    THROUGHPUT_FACTOR = 0.25     # per-element cost fraction once issued
+
     def __init__(self, db: LatencyDB, opt_level: str = "O3",
-                 lanes: int = 8, default_ns: float = 5.0):
+                 lanes: int = 8, default_ns: float = 5.0,
+                 mem_streams: int = 8, filters: dict[str, str] | None = None):
         self.db = db
         self.opt_level = opt_level
         self.lanes = lanes
         self.default_ns = default_ns
+        self.mem_streams = mem_streams
+        # env filters (device_kind/backend/jax_version): a DB accumulates
+        # runs across devices, and pricing one device's module with another
+        # device's rows would be meaningless (compare_markdown's rule)
+        self.filters = dict(filters) if filters else {}
 
-    def estimate_ns(self, hlo_text: str) -> float:
-        total = 0.0
-        for (opcode, n), count in hlo_analysis.op_histogram(hlo_text).items():
+    # ------------------------------------------------------------- lookups
+    def _table_latency(self, table_op: str) -> tuple[float, bool]:
+        """(latency ns, was a measured row found). Falls back from the exact
+        table row to its base row (``sub.float32`` -> ``sub``) before
+        resorting to ``default_ns``."""
+        lat = self.db.lookup_ns(table_op, self.opt_level, **self.filters)
+        if lat is not None:
+            return lat, True
+        base = table_op.split(".")[0]
+        if base != table_op:
+            lat = self.db.lookup_ns(base, self.opt_level, **self.filters)
+            if lat is not None:
+                return lat, True
+        return self.default_ns, False
+
+    def memory_ladder(self) -> list[MemoryRung]:
+        """Measured chase rungs in the DB, ascending by working set.
+
+        Only unsuffixed rows participate (``inkernel.mem.8192.vmem`` is a
+        forced-residency experiment, not the hierarchy); where both the
+        in-kernel row and its host twin exist at one working set, the
+        in-kernel (device-side) number wins.
+        """
+        rungs: dict[int, MemoryRung] = {}
+        for r in self.db.query(category="memory", **self.filters):
+            m = _MEM_ROW_RE.match(r.op)
+            if not m or r.opt_level != self.opt_level:
+                continue
+            ws = int(m.group(1))
+            source = "inkernel" if r.op.startswith("inkernel.") else "host"
+            if ws in rungs and rungs[ws].source == "inkernel" and source == "host":
+                continue
+            lm = re.search(r"(?:line|stride)=(\d+)", r.notes)
+            line = int(lm.group(1)) if lm else 64
+            rungs[ws] = MemoryRung(working_set_bytes=ws,
+                                   ns_per_line=r.latency_ns,
+                                   line_bytes=line, source=source)
+        return sorted(rungs.values(), key=lambda g: g.working_set_bytes)
+
+    def _memory_ns(self, bytes_accessed: float) -> float:
+        """Price HBM traffic off the chase ladder: the rung whose working set
+        covers the module's footprint (else the deepest rung) gives ns/byte;
+        ``mem_streams`` concurrent streams amortize the serial-chase latency."""
+        if bytes_accessed <= 0:
+            return 0.0
+        ladder = self.memory_ladder()
+        if not ladder:
+            return 0.0
+        rung = next((g for g in ladder if g.working_set_bytes >= bytes_accessed),
+                    ladder[-1])
+        ns_per_byte = rung.ns_per_line / rung.line_bytes
+        return bytes_accessed * ns_per_byte / max(self.mem_streams, 1)
+
+    # ------------------------------------------------------------- pricing
+    def _instance_ns(self, latency: float, elements: float,
+                     instances: float = 1.0) -> float:
+        """Issue latency per instance + lane-amortized per-element throughput."""
+        extra = max(elements - instances, 0.0)
+        return instances * latency + (extra / self.lanes) * self.THROUGHPUT_FACTOR * latency
+
+    def estimate(self, hlo_text: str) -> PricedReport:
+        """Price a module; returns the full :class:`PricedReport` diagnosis."""
+        mc = hlo_analysis.ModuleCost(hlo_text)
+        hist = mc.dynamic_histogram()
+        by_class: dict[str, ClassCost] = {}
+        unpriced_ops: dict[str, float] = {}
+        compute = priced = unpriced = 0.0
+        matmul_instances = 0.0
+
+        def account(cls: str, ns: float, count: float, elems: float) -> None:
+            by_class[cls] = by_class.get(cls, ClassCost())._plus(ns, count, elems)
+
+        for (opcode, elems), count in sorted(hist.items()):
+            if count <= 0 or opcode in hlo_analysis.STRUCTURAL_OPS:
+                continue
+            if opcode in ("dot", "convolution"):
+                matmul_instances += count
+                continue            # priced below from dynamic FLOPs
             table_op = hlo_analysis.HLO_TO_TABLE.get(opcode)
             if table_op is None:
+                ns = count * self._instance_ns(self.default_ns, elems)
+                compute += ns
+                unpriced += count
+                unpriced_ops[opcode] = unpriced_ops.get(opcode, 0.0) + count
+                account("unpriced", ns, count, count * elems)
                 continue
-            lat = self.db.lookup_ns(table_op, self.opt_level)
-            if lat is None:
-                base = table_op.split(".")[0]
-                lat = self.db.lookup_ns(base, self.opt_level, self.default_ns)
-            # one issue latency + per-element throughput amortized over lanes
-            total += count * (lat + (max(n - 1, 0) / self.lanes) * 0.25 * lat)
-        return total
+            lat, covered = self._table_latency(table_op)
+            ns = count * self._instance_ns(lat, elems)
+            compute += ns
+            if covered:
+                priced += count
+                account(_table_category(table_op), ns, count, count * elems)
+            else:
+                unpriced += count
+                unpriced_ops[opcode] = unpriced_ops.get(opcode, 0.0) + count
+                account("unpriced", ns, count, count * elems)
+
+        if matmul_instances:
+            dyn_flops = mc.dynamic_flops()
+            fmas = (dyn_flops.get("dot", 0.0)
+                    + dyn_flops.get("convolution", 0.0)) / 2.0
+            lat, covered = self._table_latency("fma.float32")
+            ns = self._instance_ns(lat, fmas, instances=matmul_instances)
+            compute += ns
+            account("matmul", ns, matmul_instances, fmas)
+            if covered:
+                priced += matmul_instances
+            else:
+                unpriced += matmul_instances
+                unpriced_ops["dot"] = unpriced_ops.get("dot", 0.0) + matmul_instances
+
+        bytes_accessed = mc.total().bytes
+        memory_ns = self._memory_ns(bytes_accessed)
+        if memory_ns:
+            account("memory", memory_ns, 0.0, 0.0)
+        countable = priced + unpriced
+        return PricedReport(
+            total_ns=max(compute, memory_ns),
+            compute_ns=compute, memory_ns=memory_ns,
+            coverage=priced / countable if countable else 1.0,
+            priced_instances=priced, unpriced_instances=unpriced,
+            by_class=by_class,
+            unpriced_opcodes=tuple(sorted(unpriced_ops.items(),
+                                          key=lambda kv: (-kv[1], kv[0]))),
+            bytes_accessed=bytes_accessed, opt_level=self.opt_level)
+
+    def estimate_ns(self, hlo_text: str) -> float:
+        """Total estimate as a float, with the :class:`PricedReport` attached
+        as ``.report`` — callers that only compare magnitudes keep working,
+        callers that need the diagnosis (what fraction was actually priced?)
+        no longer have to re-run the analysis."""
+        report = self.estimate(hlo_text)
+        out = _EstimatedNs(report.total_ns)
+        out.report = report
+        return out
+
+
+# ------------------------------------------------------------------ serving
+@dataclasses.dataclass(frozen=True)
+class ServingPoint:
+    """One ``serving.<phase>.<cell>`` row, parsed back from its record.
+
+    The record's ``latency_ns`` is the *measured* wall clock of the lowered
+    prefill / decode-step executable; the estimator's prediction and its
+    diagnosis ride along in the notes (``predicted_ns=... coverage=...``),
+    so predicted-vs-measured never needs a second lookup.
+    """
+
+    phase: str                   # "prefill" | "decode"
+    batch: int
+    prompt_len: int
+    measured_ns: float
+    predicted_ns: float
+    compute_ns: float
+    memory_ns: float
+    coverage: float
+    model: str = ""
+
+    @property
+    def ratio(self) -> float:
+        """predicted / measured (1.0 = perfect model)."""
+        return self.predicted_ns / self.measured_ns if self.measured_ns else 0.0
+
+    @property
+    def abs_log10_error(self) -> float:
+        """|log10(predicted/measured)| — the CI tolerance metric: symmetric
+        in over/under-prediction and stable across cell magnitudes."""
+        import math
+
+        if self.measured_ns <= 0 or self.predicted_ns <= 0:
+            return float("inf")
+        return abs(math.log10(self.predicted_ns / self.measured_ns))
+
+
+def servingpoint_from_record(rec: LatencyRecord) -> ServingPoint:
+    """Parse a ``serving.*`` :class:`LatencyRecord` back into its point."""
+    kv = parse_kv_notes(rec.notes)
+    parts = rec.op.split(".")
+    assert parts[0] == "serving" and len(parts) >= 3, rec.op
+    return ServingPoint(
+        phase=kv.get("phase", parts[1]),
+        batch=int(kv["batch"]), prompt_len=int(kv["prompt"]),
+        measured_ns=rec.latency_ns,
+        predicted_ns=float(kv["predicted_ns"]),
+        compute_ns=float(kv.get("compute_ns", 0.0)),
+        memory_ns=float(kv.get("memory_ns", 0.0)),
+        coverage=float(kv.get("coverage", 0.0)),
+        model=kv.get("model", ""))
+
+
+@functools.cache
+def _table_category(table_op: str) -> str:
+    """Registry category of a table row (``sub.float32`` -> ``fp32``);
+    memory rows and unknown names fall back to sensible classes."""
+    from repro.core import chains
+
+    names = {o.name: o.category for o in chains.default_registry()}
+    if table_op in names:
+        return names[table_op]
+    base = table_op.split(".")[0]
+    return names.get(base, "uncategorized")

@@ -205,11 +205,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
 
 
 def prefill(params: Params, cfg: ModelConfig, rt: Runtime, *, tokens=None,
-            embeds=None, positions=None):
-    """Process the prompt; returns (last-token logits [B,V], caches)."""
+            embeds=None, positions=None, last_positions=None):
+    """Process the prompt; returns (last-token logits [B,V], caches).
+
+    ``last_positions`` ([B] int32) gathers each row's logits at its *own*
+    final prompt token instead of the padded batch's last column — the
+    right-padded ragged-prompt case: a row whose prompt is shorter than the
+    batch's ``max_len`` must be sampled from its true last token, not from
+    a pad position (causality makes that gather exact: position ``len-1``
+    never attends to the padding that follows it).
+    """
     h, _, caches = forward(params, cfg, rt, tokens=tokens, embeds=embeds,
                            positions=positions, want_cache=True)
-    logits = common.top1_logits(h[:, -1], _out_embed(params, cfg))
+    if last_positions is None:
+        last = h[:, -1]
+    else:
+        last = jnp.take_along_axis(
+            h, last_positions.astype(jnp.int32)[:, None, None], axis=1)[:, 0]
+    logits = common.top1_logits(last, _out_embed(params, cfg))
     return logits, caches
 
 

@@ -1,9 +1,20 @@
 """Batched generation engine: prefill + greedy/temperature decode.
 
-Continuous-batching-lite: requests are padded into one batch; per-request
-``kv_len`` tracks ragged prompts; finished rows keep decoding into a waste
-slot (masked at the end) — the standard static-batch serving pattern, and the
-program that ``decode_32k`` / ``long_500k`` cells lower.
+Continuous-batching-lite: requests are padded into one batch; ragged prompts
+are **right-padded** and each row's first token is sampled from its own last
+real prompt token (causal attention makes that gather exact — see
+``transformer.prefill``'s ``last_positions``); rows that emit ``eos_id`` keep
+decoding into a waste slot (the static-batch pattern: the lockstep batch
+cannot shrink) and their waste tokens are masked out of the result. This is
+the program the serving-path characterization prices: ``ServingCostProbe``
+lowers :meth:`Engine.lower_prefill` / :meth:`Engine.lower_decode` HLO and
+pairs the estimator's prediction with the measured wall clock
+(docs/serving.md).
+
+Known approximation: after prefill, decode steps use one shared position
+counter for the whole batch, so a short row's later tokens sit at the padded
+batch's positions (standard static-batch behavior), and its KV slots between
+``len(prompt)`` and the batch's ``max_len`` hold pad-token entries.
 """
 from __future__ import annotations
 
@@ -20,9 +31,10 @@ from repro.models.config import ModelConfig, Runtime
 
 @dataclasses.dataclass
 class GenerateResult:
-    tokens: np.ndarray          # [B, max_new]
+    tokens: np.ndarray          # [B, max_new]; waste slots masked to eos_id
     prompt_lens: np.ndarray
-    steps: int
+    steps: int                  # decode steps actually run (early-exit aware)
+    finished_steps: np.ndarray | None = None  # per-row eos step, -1 = never
 
 
 class Engine:
@@ -33,33 +45,86 @@ class Engine:
         self.rt = rt
         self.max_len = max_len
         self._prefill = jax.jit(
-            lambda p, t: transformer.prefill(p, cfg, rt, tokens=t))
+            lambda p, t, last: transformer.prefill(p, cfg, rt, tokens=t,
+                                                   last_positions=last))
         self._decode = jax.jit(
             lambda p, c, t, pos: transformer.decode_step(p, c, t, pos, cfg, rt),
             donate_argnums=(1,))
 
     def generate(self, prompts: list[list[int]], *, max_new: int = 32,
-                 temperature: float = 0.0, seed: int = 0) -> GenerateResult:
+                 temperature: float = 0.0, seed: int = 0,
+                 eos_id: int | None = None) -> GenerateResult:
         b = len(prompts)
         lens = np.array([len(p) for p in prompts], np.int32)
         plen = int(lens.max())
         toks = np.zeros((b, plen), np.int32)
         for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p        # right-align not needed: causal + same len
-        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+            toks[i, :len(p)] = p    # right-padded; per-row gather below
+        logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                      jnp.asarray(lens - 1))
         cache = transformer.pad_cache(cache, self.cfg, plen + max_new)
         key = jax.random.PRNGKey(seed)
         out = np.zeros((b, max_new), np.int32)
+        finished = np.full((b,), -1, np.int32)
         tok = _sample(logits, temperature, key)
+        steps = 0
         for step in range(max_new):
-            out[:, step] = np.asarray(tok)[:, 0]
+            t = np.asarray(tok)[:, 0]
+            out[:, step] = t
+            steps = step + 1
+            if eos_id is not None:
+                finished = np.where((t == eos_id) & (finished < 0),
+                                    step, finished)
             if step == max_new - 1:
                 break
+            if eos_id is not None and (finished >= 0).all():
+                break               # every row done: stop burning waste slots
             logits, cache = self._decode(self.params, cache, jnp.asarray(tok),
                                          plen + step)
             key = jax.random.fold_in(key, step)
             tok = _sample(logits, temperature, key)
-        return GenerateResult(tokens=out, prompt_lens=lens, steps=max_new)
+        if eos_id is not None:
+            # waste-slot masking: a finished row keeps decoding in the static
+            # batch; everything after its eos is noise, not output
+            col = np.arange(max_new)[None, :]
+            done = finished[:, None]
+            out = np.where((done >= 0) & (col > done), eos_id, out)
+        return GenerateResult(tokens=out, prompt_lens=lens, steps=steps,
+                              finished_steps=finished if eos_id is not None
+                              else None)
+
+    # ---------------------------------------------------- characterization
+    def lower_prefill(self, batch: int, prompt_len: int):
+        """Lower the prefill computation at one ``(batch, prompt_len)`` cell.
+
+        Returns ``(lowered, args)``: the jit-lowered prefill (``.compile()``
+        yields the executable and its optimized HLO text) plus the concrete
+        arrays to run it with — what ``ServingCostProbe`` prices and times.
+        """
+        toks = jnp.reshape(
+            jnp.arange(batch * prompt_len, dtype=jnp.int32)
+            % max(self.cfg.vocab_size, 1), (batch, prompt_len))
+        last = jnp.full((batch,), prompt_len - 1, jnp.int32)
+        args = (self.params, toks, last)
+        return self._prefill.lower(*args), args
+
+    def lower_decode(self, batch: int, prompt_len: int,
+                     max_len: int | None = None):
+        """Lower one decode step at a cell (cache sized ``max_len``, position
+        ``prompt_len`` — the first generated token's step).
+
+        Uses a *non-donating* jit so the probe can execute the compiled step
+        repeatedly against the same cache buffer while timing.
+        """
+        max_len = max_len if max_len is not None else prompt_len + 32
+        cache = transformer.init_cache(self.cfg, batch, max_len,
+                                       self.cfg.cdtype)
+        toks = jnp.zeros((batch, 1), jnp.int32)
+        cfg, rt = self.cfg, self.rt
+        fn = jax.jit(lambda p, c, t: transformer.decode_step(
+            p, c, t, prompt_len, cfg, rt))
+        args = (self.params, cache, toks)
+        return fn.lower(*args), args
 
 
 def _sample(logits: jax.Array, temperature: float, key) -> jax.Array:

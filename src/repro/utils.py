@@ -117,6 +117,23 @@ def timestamp() -> str:
     return time.strftime("%Y-%m-%dT%H:%M:%S")
 
 
+def parse_kv_notes(notes: str) -> dict[str, str]:
+    """Parse the space-separated ``key=value`` convention of record notes.
+
+    Probes persist structured metadata in ``LatencyRecord.notes`` as
+    ``ws=8192 line=64 space=vmem``; this is the single inverse for every
+    consumer (membench chase points, serving predicted-vs-measured rows).
+    Free-text fragments without ``=`` are ignored.
+    """
+    out: dict[str, str] = {}
+    for tok in notes.split():
+        if "=" in tok:
+            k, _, v = tok.partition("=")
+            if k:
+                out[k] = v
+    return out
+
+
 def markdown_table(headers: Iterable[str], rows: Iterable[Iterable[Any]]) -> str:
     headers = list(headers)
     lines = ["| " + " | ".join(str(h) for h in headers) + " |",

@@ -89,3 +89,44 @@ def test_op_histogram_nonempty():
         jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
     hist = hlo_analysis.op_histogram(txt)
     assert sum(hist.values()) >= 1
+
+
+def test_dynamic_histogram_scan_multiplier():
+    """An op inside a scanned body counts trip_count times dynamically while
+    the flat histogram still counts its one op line."""
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c), None
+        return lax.scan(body, x, None, length=6)[0]
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32)).compile().as_text()
+    flat = sum(c for (op, _), c in hlo_analysis.op_histogram(txt).items()
+               if op == "tanh")
+    dyn = sum(c for (op, _), c in
+              hlo_analysis.dynamic_op_histogram(txt).items() if op == "tanh")
+    assert flat == 1
+    assert dyn == 6.0
+
+
+def test_dynamic_flops_matches_total():
+    """Σ dynamic_flops by opcode == the rolled-up module total."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return lax.scan(body, x, None, length=4)[0]
+
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    mc = hlo_analysis.ModuleCost(
+        jax.jit(f).lower(x, w).compile().as_text())
+    dyn = mc.dynamic_flops()
+    assert dyn.get("dot", 0) == pytest.approx(4 * 2 * 16 * 32 * 32)
+    assert sum(dyn.values()) == pytest.approx(mc.total().flops)
+
+
+def test_structural_ops_subset_sanity():
+    # structural set must never swallow priceable arithmetic opcodes
+    priceable = set(hlo_analysis.HLO_TO_TABLE) | {"dot", "convolution",
+                                                  "reduce"}
+    assert not (hlo_analysis.STRUCTURAL_OPS & priceable)

@@ -1,0 +1,309 @@
+"""Serving path: Engine batching behavior + ServingCostProbe characterization.
+
+Engine tests lock the static-batch semantics down (ragged right-padding with
+per-row last-token sampling, finished-rows-keep-decoding waste-slot masking,
+seeded sampling determinism); probe tests run the predicted-vs-measured cells
+through the Session machinery (caching, resume, table, CLI).
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Plan, ServingCostProbe, Session, serving_tiny_config
+from repro.api import cli
+from repro.core import perfmodel
+from repro.core.latency_db import LatencyDB
+from repro.models import transformer
+from repro.serving import Engine
+
+CFG, RT = serving_tiny_config()
+
+
+@pytest.fixture(scope="module")
+def engine():
+    params = transformer.init_lm(jax.random.PRNGKey(0), CFG)
+    return Engine(params, CFG, RT)
+
+
+# ================================================================== engine
+def test_ragged_prompts_right_padded_first_token_exact(engine):
+    """A short row in a ragged batch must sample its first token from its own
+    last prompt token (causal attention makes the padded tail invisible to
+    it), i.e. match the same prompt run alone."""
+    long, short = [5, 6, 7, 8, 9, 10], [11, 12]
+    batched = engine.generate([long, short], max_new=1)
+    alone_short = engine.generate([short], max_new=1)
+    alone_long = engine.generate([long], max_new=1)
+    assert batched.tokens[1, 0] == alone_short.tokens[0, 0]
+    assert batched.tokens[0, 0] == alone_long.tokens[0, 0]
+    np.testing.assert_array_equal(batched.prompt_lens, [6, 2])
+
+
+def test_waste_slot_masking(engine):
+    """Once a row emits eos it keeps decoding (static batch), but everything
+    after its eos is masked out of the result."""
+    free = engine.generate([[1, 2, 3], [4, 5, 6]], max_new=6)
+    eos = int(free.tokens[0, 1])        # a token row 0 actually emits
+    r = engine.generate([[1, 2, 3], [4, 5, 6]], max_new=6, eos_id=eos)
+    assert r.finished_steps is not None
+    s0 = r.finished_steps[0]
+    assert 0 <= s0 <= 1                 # row 0 finished at (or before) step 1
+    assert int(r.tokens[0, s0]) == eos
+    assert (r.tokens[0, s0 + 1:] == eos).all()      # waste slots masked
+    # unfinished rows are untouched up to the steps actually run
+    if r.finished_steps[1] < 0:
+        np.testing.assert_array_equal(r.tokens[1, :r.steps],
+                                      free.tokens[1, :r.steps])
+
+
+def test_all_rows_finished_stops_early(engine):
+    free = engine.generate([[1, 2, 3]], max_new=8)
+    eos = int(free.tokens[0, 0])        # first emitted token ends the row
+    r = engine.generate([[1, 2, 3]], max_new=8, eos_id=eos)
+    assert r.finished_steps[0] == 0
+    assert r.steps < 8                  # no point burning 7 waste steps
+    assert (r.tokens[0, 1:] == eos).all()
+
+
+def test_no_eos_keeps_legacy_shape(engine):
+    r = engine.generate([[1, 2, 3], [4, 5]], max_new=4)
+    assert r.tokens.shape == (2, 4)
+    assert r.steps == 4
+    assert r.finished_steps is None
+
+
+def test_temperature_sampling_seed_determinism(engine):
+    a = engine.generate([[1, 2, 3]], max_new=6, temperature=0.8, seed=7)
+    b = engine.generate([[1, 2, 3]], max_new=6, temperature=0.8, seed=7)
+    np.testing.assert_array_equal(a.tokens, b.tokens)   # same seed, same draw
+    others = [engine.generate([[1, 2, 3]], max_new=6, temperature=0.8, seed=s)
+              for s in range(1, 5)]
+    assert any((o.tokens != a.tokens).any() for o in others), \
+        "4 different seeds all reproduced seed 7's sample"
+
+
+def test_greedy_ignores_seed(engine):
+    a = engine.generate([[1, 2, 3]], max_new=4, temperature=0.0, seed=0)
+    b = engine.generate([[1, 2, 3]], max_new=4, temperature=0.0, seed=123)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ============================================================ lowering hooks
+def test_lower_decode_is_not_donating(engine):
+    lowered, args = engine.lower_decode(1, 8)
+    compiled = lowered.compile()
+    compiled(*args)
+    compiled(*args)                     # donated cache would fail here
+    assert '"known_trip_count"' in compiled.as_text()
+
+
+# ================================================================== probe
+def _run_cell(db_path, phase="prefill", batch=1, prompt=8, **kw):
+    session = Session(db=str(db_path))
+    plan = Plan((ServingCostProbe(phase, batch, prompt, reps=2, **kw),),
+                name="cell")
+    return session, session.run(plan)
+
+
+def test_probe_records_predicted_and_measured(tmp_path):
+    session, result = _run_cell(tmp_path / "db.json")
+    assert result.summary().startswith("1 measured")
+    (rec,) = result.records()
+    assert rec.op == "serving.prefill.b1p8"
+    assert rec.category == "serving" and rec.opt_level == "O3"
+    pt = perfmodel.servingpoint_from_record(rec)
+    assert pt.phase == "prefill" and pt.batch == 1 and pt.prompt_len == 8
+    assert pt.predicted_ns > 0 and pt.measured_ns > 0
+    assert 0.0 <= pt.coverage <= 1.0
+    assert pt.model == CFG.name
+
+
+def test_probe_decode_cell_and_cache_resume(tmp_path):
+    db = tmp_path / "db.json"
+    _, first = _run_cell(db, phase="decode", prompt=8)
+    assert first.summary().startswith("1 measured")
+    _, again = _run_cell(db, phase="decode", prompt=8)
+    assert again.summary().startswith("0 measured, 1 cached")
+
+
+def test_probe_prices_from_measured_rows(tmp_path):
+    """With the dep rows in the DB, the cell's coverage must beat an empty
+    DB's 0.0 — the plan-order contract of Plan.serving(with_deps=True)."""
+    db = tmp_path / "db.json"
+    session = Session(db=str(db))
+    plan = (Plan.instructions(ops=("add", "mul", "fma.float32", "add.float32",
+                                   "mul.float32", "sub.float32", "max.float32",
+                                   "rsqrt", "tanh"),
+                              opt_levels=("O3",))
+            + Plan((ServingCostProbe("decode", 1, 8, reps=1),), name="cell"))
+    result = session.run(plan)
+    assert not result.failed
+    rec = next(r.record for r in result.results
+               if r.record is not None and r.record.op.startswith("serving."))
+    assert perfmodel.servingpoint_from_record(rec).coverage > 0.0
+
+
+def test_nondefault_model_is_a_different_cache_identity():
+    import dataclasses
+
+    other = dataclasses.replace(CFG, name="other-model")
+    a = ServingCostProbe("prefill", 1, 8)
+    b = ServingCostProbe("prefill", 1, 8, cfg=other, rt=RT)
+    assert a.op == "serving.prefill.b1p8"
+    assert b.op == "serving.prefill.b1p8.other-model"
+    assert a.logical_key() != b.logical_key()
+    # a non-default decode cache size is a different HLO -> different identity
+    c = ServingCostProbe("decode", 1, 8, max_len=4096)
+    assert c.op == "serving.decode.b1p8.c4096"
+    assert c.logical_key() != ServingCostProbe("decode", 1, 8).logical_key()
+
+
+def test_match_names_families():
+    p = ServingCostProbe("decode", 2, 64)
+    assert {"serving", "serving.decode", "serving.decode.b2p64"} \
+        <= p.match_names()
+    plan = Plan.serving(with_deps=False)
+    assert len(plan.filter(ops=["serving"])) == len(plan)
+    decode_only = plan.filter(ops=["serving.decode"])
+    assert len(decode_only) == len(plan) // 2
+    assert all(p.phase == "decode" for p in decode_only)
+
+
+def test_plan_serving_deps_feed_the_estimator_ladder():
+    """Regression: the plan's memory dep rungs must be rows the estimator's
+    memory_ladder() actually reads — a fidelity-suffixed rung (quick's
+    512-1536 steps) is excluded as a different experiment, and a ladder the
+    estimator can't read silently prices every module's memory term at 0."""
+    mem_ops = [p.op for p in Plan.serving()
+               if type(p).__name__ == "MemoryProbe"]
+    assert mem_ops, "serving plan lost its memory deps"
+    for op in mem_ops:
+        assert perfmodel._MEM_ROW_RE.match(op), \
+            f"dep rung {op!r} is invisible to memory_ladder()"
+
+
+def test_plan_serving_dep_ordering():
+    """Dependencies (instruction + memory rows) come before the serving
+    cells — plan order is Session execution order."""
+    plan = Plan.serving()
+    kinds = [type(p).__name__ for p in plan]
+    first_serving = kinds.index("ServingCostProbe")
+    assert "InstructionProbe" in kinds[:first_serving]
+    assert "MemoryProbe" in kinds[:first_serving]
+    assert all(k == "ServingCostProbe" for k in kinds[first_serving:])
+
+
+def test_full_plan_contains_serving_cells():
+    from repro.api import named_plan
+
+    ops = {p.op for p in named_plan("full")}
+    assert "serving.prefill.b1p16" in ops
+    assert "serving.decode.b2p64" in ops
+
+
+def test_bad_phase_rejected():
+    with pytest.raises(ValueError, match="phase"):
+        ServingCostProbe("train", 1, 8)
+
+
+# ================================================================== table
+def test_serving_markdown_table(tmp_path):
+    session, _ = _run_cell(tmp_path / "db.json")
+    md = session.db.compare_markdown(prefix="serving.")
+    lines = md.splitlines()
+    assert lines[0].startswith("| cell | phase | batch | prompt |")
+    assert any("serving.prefill.b1p8" in l for l in lines[2:])
+    assert "| prefill | 1 | 8 |" in md
+    # the inkernel pairing stays untouched by serving rows
+    assert "serving" not in session.db.compare_markdown()
+
+
+def test_serving_table_orders_cells_numerically(tmp_path):
+    db = LatencyDB()
+    for prompt in (16, 128, 4):
+        import tests.test_perfmodel as tp
+
+        db.add(tp._rec(f"serving.decode.b1p{prompt}", 100.0, cat="serving",
+                       notes=f"phase=decode batch=1 prompt={prompt} "
+                             f"predicted_ns=50.0 coverage=1.0"))
+    md = db.compare_markdown(prefix="serving.")
+    rows = [l for l in md.splitlines() if "serving.decode" in l]
+    assert [r.split("|")[1].strip() for r in rows] == [
+        "serving.decode.b1p4", "serving.decode.b1p16",
+        "serving.decode.b1p128"]
+
+
+# ============================================================ tolerance gate
+def _point(phase="prefill", batch=1, prompt=16, pred=100.0, meas=1000.0,
+           cov=0.9):
+    return perfmodel.ServingPoint(phase=phase, batch=batch, prompt_len=prompt,
+                                  measured_ns=meas, predicted_ns=pred,
+                                  compute_ns=pred, memory_ns=0.0,
+                                  coverage=cov)
+
+
+def test_check_points_tolerance_logic():
+    from benchmarks.check_serving import check_points
+
+    tol = {"max_abs_log10_ratio": 2.0, "min_coverage": 0.5}
+    # 1 decade under, coverage fine -> clean
+    assert check_points([_point()], tol) == []
+    # 3 decades off -> error violation
+    v = check_points([_point(pred=1.0, meas=1000.0)], tol)
+    assert len(v) == 1 and "|log10(pred/meas)|" in v[0]
+    # degenerate zero prediction -> inf error, still caught
+    assert check_points([_point(pred=0.0)], tol)
+    # low coverage -> coverage violation
+    v = check_points([_point(cov=0.1)], tol)
+    assert len(v) == 1 and "coverage" in v[0]
+
+
+def test_check_serving_main(tmp_path, capsys):
+    from benchmarks import check_serving
+    import tests.test_perfmodel as tp
+
+    db = LatencyDB(path=str(tmp_path / "db.json"))
+    db.add(tp._rec("serving.decode.b1p16", 1000.0, cat="serving",
+                   notes="phase=decode batch=1 prompt=16 predicted_ns=500.0 "
+                         "coverage=0.9"))
+    db.save()
+    tol = tmp_path / "tol.json"
+    tol.write_text(json.dumps({"max_abs_log10_ratio": 1.0,
+                               "min_coverage": 0.5}))
+    assert check_serving.main(["--db", db.path, "--tolerance", str(tol)]) == 0
+    out = capsys.readouterr().out
+    assert "within tolerance" in out
+    # tighten the band below the cell's 0.3 decades -> violation
+    tol.write_text(json.dumps({"max_abs_log10_ratio": 0.1,
+                               "min_coverage": 0.5}))
+    assert check_serving.main(["--db", db.path, "--tolerance", str(tol)]) == 1
+    # a DB with no serving rows is a usage error, not a silent pass
+    empty = LatencyDB(path=str(tmp_path / "empty.json"))
+    empty.add(tp._rec("add", 1.0))
+    empty.save()
+    assert check_serving.main(["--db", empty.path,
+                               "--tolerance", str(tol)]) == 2
+
+
+# ==================================================================== CLI
+def test_cli_serving_plan_smoke(tmp_path, capsys):
+    db = tmp_path / "db.json"
+    args = ["characterize", "--plan", "serving",
+            "--ops", "serving.prefill.b1p16,add,fma.float32",
+            "--reps", "1", "--warmup", "0", "--db", str(db)]
+    rc = cli.main(args + ["--table"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "3 measured, 0 cached, 0 failed" in out
+    assert "== serving predicted vs measured" in out
+    assert "serving.prefill.b1p16" in out
+    blob = json.loads(db.read_text())
+    ops = {r["op"] for r in blob["records"]}
+    assert ops == {"add", "fma.float32", "serving.prefill.b1p16"}
+
+    rc = cli.main(args)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "0 measured, 3 cached, 0 failed" in out
