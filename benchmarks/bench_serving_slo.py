@@ -1,0 +1,119 @@
+"""Serving-SLO bench: the throughput-vs-latency curve, predicted vs measured.
+
+For each arrival rate, one seeded trace is replayed through both sides of
+``repro.traffic`` — the LatencyDB-priced simulator and the engine's
+continuous-batching slot pool — and aggregated into exact-rank TTFT/TPOT/e2e
+percentiles. Emits ``results/serving_slo.json`` (per-rate summaries **plus
+raw per-request samples**, so downstream reports can recompute any
+percentile) and ``results/serving_slo.md`` (the predicted-vs-measured
+table). Registered as ``serving_slo`` in ``python -m benchmarks.run``; also
+runnable standalone::
+
+    PYTHONPATH=src:. python -m benchmarks.bench_serving_slo [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import sys
+
+from repro.api import Plan, Session, serving_tiny_config
+from repro.api.plan import SLO_RATES
+from repro.core.timing import Timer
+from repro.traffic import (ContinuousBatchingScheduler, EngineExecutor,
+                           PredictedCostModel, TraceConfig, generate_trace,
+                           simulate, slo_table, summarize)
+from repro.traffic.metrics import request_metrics
+from repro.utils import dump_json
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _samples(sched_result) -> list[dict]:
+    """Raw per-request rows (ns): what the percentiles were computed from."""
+    out = []
+    for rr in sched_result.requests:
+        m = request_metrics(rr)
+        out.append({"uid": m.uid, "arrival_ns": rr.request.arrival_ns,
+                    "prompt_len": rr.request.prompt_len,
+                    "max_new": rr.request.max_new, "slot": rr.slot,
+                    "ttft_ns": m.ttft_ns,
+                    "tpot_ns": None if math.isnan(m.tpot_ns) else m.tpot_ns,
+                    "e2e_ns": m.e2e_ns, "queue_ns": m.queue_ns,
+                    "n_tokens": m.n_tokens})
+    return out
+
+
+def run_bench(timer: Timer, quick: bool = False,
+              rates=SLO_RATES, n_requests: int = 12, n_slots: int = 4,
+              seed: int = 0) -> list[tuple[str, float, str]]:
+    """One predicted + measured schedule per rate; CSV rows for run.py."""
+    import jax
+
+    from repro.models import transformer
+    from repro.serving import Engine
+
+    if quick:
+        rates, n_requests = rates[:2], max(6, n_requests // 2)
+    # fill the estimator's pricing inputs through the Session cache (the
+    # rate sweep itself runs live below so the bench always re-measures)
+    session = Session(db=f"{RESULTS}/latency_db.json", timer=timer)
+    session.run(Plan.slo(rates=()))
+    cfg, rt = serving_tiny_config()
+    eng = Engine(transformer.init_lm(jax.random.PRNGKey(0), cfg), cfg, rt)
+    costs = PredictedCostModel(eng, session.db, n_slots,
+                               filters=dict(session.env))
+    ex = EngineExecutor(eng, n_slots)
+    sched = ContinuousBatchingScheduler(ex, eos_id=None)
+
+    rows, table_rows, out_rates = [], [], []
+    for rate in rates:
+        tcfg = TraceConfig(n_requests=n_requests, rate_rps=rate, seed=seed,
+                           vocab_size=cfg.vocab_size)
+        trace = generate_trace(tcfg)
+        ex.warm(sorted({r.prompt_len for r in trace}))
+        pred_sched = simulate(trace, costs)
+        meas_sched = sched.run(trace)
+        pred, meas = summarize(pred_sched), summarize(meas_sched)
+        table_rows.append({"rate_rps": rate, "predicted": pred,
+                           "measured": meas})
+        out_rates.append({
+            "rate_rps": rate, "n_requests": n_requests, "n_slots": n_slots,
+            "seed": seed, "coverage": costs.min_coverage,
+            "predicted": pred.as_record(), "measured": meas.as_record(),
+            "predicted_samples": _samples(pred_sched),
+            "measured_samples": _samples(meas_sched)})
+        rows.append((f"serving_slo.r{rate:g}.ttft_p50",
+                     meas.ttft_ns[50.0] / 1e3,
+                     f"predicted={pred.ttft_ns[50.0] / 1e3:.1f}us "
+                     f"goodput={meas.goodput_tok_s:.1f}tok/s "
+                     f"coverage={costs.min_coverage:.2f}"))
+        rows.append((f"serving_slo.r{rate:g}.tpot_p50",
+                     meas.tpot_ns[50.0] / 1e3,
+                     f"predicted={pred.tpot_ns[50.0] / 1e3:.1f}us "
+                     f"n={n_requests} slots={n_slots}"))
+
+    md = slo_table(table_rows)
+    dump_json({"model": cfg.name, "rates": out_rates},
+              f"{RESULTS}/serving_slo.json")
+    with open(f"{RESULTS}/serving_slo.md", "w") as f:
+        f.write(md + "\n")
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run_bench(Timer(warmup=2, reps=10 if args.quick else 20),
+                     quick=args.quick)
+    for name, us, derived in rows:
+        print(f"{name},{us:.4f},{derived}")
+    with open(f"{RESULTS}/serving_slo.md") as f:
+        print(f.read())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""CI gate: serving-SLO prediction error within the checked-in tolerance.
+
+Reads the ``slo.*`` rows of a LatencyDB (written by ``python -m repro
+serve-slo`` or ``--plan slo``), recomputes ``|log10(predicted/measured)|``
+for the headline SLO metrics — p50 TTFT and p50 TPOT — and fails if any
+point violates ``benchmarks/slo_tolerance.json``. The serving-cell gate
+(``check_serving.py``) bounds one executable's cost model; this one bounds
+the *composition*: costs threaded through queueing, batching and slot
+recycling must still land inside the recorded band.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_slo --db /tmp/slo_db.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Sequence
+
+from repro.core import perfmodel
+from repro.core.latency_db import LatencyDB
+
+DEFAULT_TOLERANCE = os.path.join(os.path.dirname(__file__),
+                                 "slo_tolerance.json")
+
+
+def check_points(points: Sequence[perfmodel.SloPoint],
+                 tolerance: dict) -> list[str]:
+    """Violation messages for ``points`` against a tolerance baseline."""
+    max_err = float(tolerance["max_abs_log10_ratio"])
+    min_cov = float(tolerance.get("min_coverage", 0.0))
+    metrics = tuple(tolerance.get("metrics", ("ttft_p50_ns", "tpot_p50_ns")))
+    violations = []
+    for pt in points:
+        name = f"slo.r{pt.rate_rps:g}"
+        for metric in metrics:
+            err = pt.abs_log10_error(metric)
+            if err > max_err:
+                violations.append(
+                    f"{name}.{metric}: |log10(pred/meas)| = {err:.2f} > "
+                    f"{max_err:.2f} (predicted "
+                    f"{pt.predicted.get(metric, float('nan')):.0f}ns, "
+                    f"measured {pt.measured.get(metric, float('nan')):.0f}ns)")
+        if pt.coverage < min_cov:
+            violations.append(
+                f"{name}: coverage {pt.coverage:.2f} < {min_cov:.2f} "
+                "(estimator priced too little of the engine from the DB)")
+    return violations
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--db", required=True, help="LatencyDB JSON path")
+    ap.add_argument("--tolerance", default=DEFAULT_TOLERANCE,
+                    help="tolerance baseline JSON (default: checked-in)")
+    args = ap.parse_args(argv)
+
+    with open(args.tolerance) as f:
+        tolerance = json.load(f)
+    db = LatencyDB(args.db)
+    points = [perfmodel.slopoint_from_record(r) for r in db.records()
+              if r.op.startswith("slo.")]
+    if not points:
+        print(f"error: no slo.* rows in {args.db} — "
+              "run `python -m repro serve-slo` first", file=sys.stderr)
+        return 2
+    for pt in sorted(points, key=lambda p: p.rate_rps):
+        print(f"slo.r{pt.rate_rps:g}: "
+              f"ttft_p50 pred={pt.predicted.get('ttft_p50_ns', 0):.0f}ns "
+              f"meas={pt.measured.get('ttft_p50_ns', 0):.0f}ns "
+              f"(|log10 err| {pt.abs_log10_error('ttft_p50_ns'):.2f}), "
+              f"tpot_p50 pred={pt.predicted.get('tpot_p50_ns', 0):.0f}ns "
+              f"meas={pt.measured.get('tpot_p50_ns', 0):.0f}ns "
+              f"(|log10 err| {pt.abs_log10_error('tpot_p50_ns'):.2f}), "
+              f"coverage={pt.coverage:.2f}")
+    violations = check_points(points, tolerance)
+    for v in violations:
+        print(f"VIOLATION: {v}", file=sys.stderr)
+    if not violations:
+        print(f"{len(points)} SLO point(s) within tolerance "
+              f"(max |log10 err| {tolerance['max_abs_log10_ratio']}, "
+              f"min coverage {tolerance.get('min_coverage', 0.0)})")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,8 @@ Examples::
     python -m repro characterize --plan serving --table  # predicted vs measured
     python -m repro characterize --plan full --shard auto  # one shard per device
     python -m repro characterize --plan table2 --shard 4   # first 4 devices
+    python -m repro serve-slo --rates 20,50,100 --db /tmp/db.json
+    python -m repro serve-slo --trace /tmp/trace.json      # replay a saved trace
 
 Scheduling is cache-aware by default: probes already in the DB for this
 (device, backend, jax version) are reported as cache hits and skipped, which
@@ -73,6 +75,30 @@ def build_parser() -> argparse.ArgumentParser:
     ch.add_argument("--reps", type=int, default=10,
                     help="timed repetitions per measurement point")
     ch.set_defaults(func=cmd_characterize)
+
+    ss = sub.add_parser(
+        "serve-slo",
+        help="predicted-vs-measured serving SLO sweep over arrival rates")
+    ss.add_argument("--db", default="/tmp/latency_db.json",
+                    help="LatencyDB JSON path: pricing inputs are read from "
+                         "it, slo.<rate> records are flushed back to it")
+    ss.add_argument("--rates", default=None,
+                    help="comma-separated arrival rates in req/s "
+                         "(default: the Plan.slo sweep 20,50,100)")
+    ss.add_argument("--trace", default=None,
+                    help="replay a saved trace JSON (traffic.save_trace) "
+                         "as one uncached point instead of the rate sweep")
+    ss.add_argument("--n-requests", type=int, default=12,
+                    help="requests per generated trace (rate sweep only)")
+    ss.add_argument("--slots", type=int, default=4,
+                    help="slot-pool size (max batch in flight)")
+    ss.add_argument("--seed", type=int, default=0,
+                    help="trace seed: same seed -> identical request stream")
+    ss.add_argument("--force", action="store_true",
+                    help="re-run slo points already in the DB")
+    ss.add_argument("--warmup", type=int, default=2)
+    ss.add_argument("--reps", type=int, default=10)
+    ss.set_defaults(func=cmd_serve_slo)
     return ap
 
 
@@ -156,6 +182,69 @@ def cmd_characterize(args: argparse.Namespace) -> int:
         if serving.count("\n") > 1:
             print("\n== serving predicted vs measured (LatencyDB x perfmodel) ==")
             print(serving)
+    return 1 if result.failed else 0
+
+
+def cmd_serve_slo(args: argparse.Namespace) -> int:
+    from repro.api.plan import Plan
+    from repro.core.latency_db import LatencyDB
+    from repro.core.perfmodel import slo_markdown, slopoint_from_record
+
+    if args.trace:
+        # Replay a saved trace as a one-off point: no Session, no caching —
+        # a trace file is an arbitrary workload, not a stable cache identity.
+        import os
+
+        import jax
+
+        from repro.api.probes import serving_tiny_config
+        from repro.core.latency_db import current_environment
+        from repro.models import transformer
+        from repro.serving import Engine
+        from repro.traffic import load_trace, run_slo_point, slo_table
+
+        trace = load_trace(args.trace)
+        if not trace:
+            print(f"error: trace {args.trace} holds no requests",
+                  file=sys.stderr)
+            return 2
+        cfg, rt = serving_tiny_config()
+        eng = Engine(transformer.init_lm(jax.random.PRNGKey(0), cfg), cfg, rt)
+        db = LatencyDB(args.db) if os.path.exists(args.db) else LatencyDB()
+        pred, meas, cov = run_slo_point(eng, db, trace, n_slots=args.slots,
+                                        filters=current_environment())
+        span_s = trace[-1].arrival_ns * 1e-9
+        rate = len(trace) / span_s if span_s > 0 else float(len(trace))
+        print(f"trace {args.trace}: {len(trace)} requests, effective rate "
+              f"{rate:.3g} req/s, estimator coverage {cov:.1%}")
+        print(slo_table([{"rate_rps": rate, "predicted": pred,
+                          "measured": meas}]))
+        return 0
+
+    rates = ([float(r) for r in args.rates.split(",")] if args.rates
+             else None)
+    kw = dict(n_requests=args.n_requests, n_slots=args.slots, seed=args.seed)
+    plan = Plan.slo(rates, **kw) if rates is not None else Plan.slo(**kw)
+    session = Session(db=args.db,
+                      timer=Timer(warmup=args.warmup, reps=args.reps))
+    print(f"plan '{plan.name}': {len(plan)} probes -> {args.db} "
+          f"[{session.env['backend']}/{session.env['device_kind']}, "
+          f"jax {session.env['jax_version']}]")
+    result = session.run(plan, force=args.force)
+    print(f"plan '{plan.name}': {result.summary()}")
+    if result.cached and not result.measured and not result.failed:
+        print("all probes were cache hits; pass --force to re-measure")
+    for r in result.failed:
+        f = r.failure
+        print(f"  FAILED {f.op}@{f.opt_level}: {f.error_type}: {f.message}")
+    wanted = {p.rate_rps for p in plan if hasattr(p, "rate_rps")}
+    points = sorted((slopoint_from_record(rec)
+                     for rec in session.db.query(category="slo",
+                                                 **session.env)),
+                    key=lambda p: p.rate_rps)
+    points = [p for p in points if p.rate_rps in wanted]
+    print()
+    print(slo_markdown(points))
     return 1 if result.failed else 0
 
 

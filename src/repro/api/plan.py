@@ -7,8 +7,8 @@ them — so "the full paper reproduction" is one Plan expression, and CI's
 quick pass is the same expression with a keep-set applied.
 
 Named plans (``quick`` / ``table2`` / ``memory`` / ``inkernel`` /
-``memory-inkernel`` / ``serving`` / ``full``) back the ``python -m repro
-characterize --plan`` CLI.
+``memory-inkernel`` / ``serving`` / ``slo`` / ``full``) back the ``python -m
+repro characterize --plan`` CLI.
 """
 from __future__ import annotations
 
@@ -22,7 +22,7 @@ from repro.core.optlevels import OPT_LEVELS
 from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
                               KernelChainProbe, KernelProbe,
                               MemoryChaseProbe, MemoryProbe, Probe,
-                              ServingCostProbe)
+                              ServingCostProbe, SloProbe)
 
 # The CLI/CI keep-set: one representative per interesting latency class,
 # including the divisor-taxonomy splits the paper highlights.
@@ -31,12 +31,17 @@ QUICK_OPS = ("add", "mul", "mad", "div.s.regular", "div.s.irregular",
              "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16")
 
 PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "memory-inkernel",
-              "serving", "full")
+              "serving", "slo", "full")
 
 # Representative (batch, prompt_len) serving cells: a single-sequence short
 # prompt and a batched longer one — enough to expose both phases' scaling
 # while staying CI-cheap on the tiny default model.
 SERVING_CELLS = ((1, 16), (2, 64))
+
+# Default arrival-rate sweep for the SLO plan: below, around and above the
+# tiny engine's typical saturation point, so the throughput-vs-latency curve
+# has a flat region and a queueing knee.
+SLO_RATES = (20.0, 50.0, 100.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +193,25 @@ class Plan:
         return Plan(_dedupe(tuple(probes)), name="serving")
 
     @staticmethod
+    def slo(rates: Sequence[float] = SLO_RATES, n_requests: int = 12,
+            n_slots: int = 4, seed: int = 0, cfg=None, rt=None,
+            with_deps: bool = True) -> "Plan":
+        """Serving-SLO sweep: one :class:`SloProbe` per arrival rate —
+        predicted-vs-measured TTFT/TPOT percentiles over the same seeded
+        trace — preceded (by default) by the estimator's pricing inputs,
+        exactly like :meth:`serving`: plan order is execution order, so each
+        SLO point's simulator is measurement-backed.
+        """
+        probes: list[Probe] = []
+        if with_deps:
+            probes += list(Plan.instructions(ops=QUICK_OPS,
+                                             opt_levels=("O3",)))
+            probes += list(Plan.memory((1 << 13, 1 << 17, 1 << 21)))
+        probes += [SloProbe(r, n_requests=n_requests, n_slots=n_slots,
+                            seed=seed, cfg=cfg, rt=rt) for r in rates]
+        return Plan(_dedupe(tuple(probes)), name="slo")
+
+    @staticmethod
     def inkernel(registry: Sequence[OpSpec] | None = None,
                  ops: Iterable[str] | None = None,
                  categories: Iterable[str] | None = None,
@@ -239,7 +263,8 @@ def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
 
 def named_plan(name: str) -> Plan:
     """The CLI's plan registry.
-    quick | table2 | memory | inkernel | memory-inkernel | serving | full."""
+    quick | table2 | memory | inkernel | memory-inkernel | serving | slo |
+    full."""
     if name == "quick":
         plan = (Plan.clock_overhead(("O0", "O3"))
                 + Plan.instructions(ops=QUICK_OPS, opt_levels=("O0", "O3"))
@@ -256,16 +281,19 @@ def named_plan(name: str) -> Plan:
         plan = Plan.memory_inkernel()
     elif name == "serving":
         plan = Plan.serving()
+    elif name == "slo":
+        plan = Plan.slo()
     elif name == "full":
-        # serving last and dep-free: the full sweep's own instruction +
-        # memory rows are the estimator's pricing inputs
+        # consumer plans (serving, slo) last and dep-free: the full sweep's
+        # own instruction + memory rows are the estimator's pricing inputs
         plan = (Plan.clock_overhead(OPT_LEVELS)
                 + Plan.instructions(opt_levels=OPT_LEVELS)
                 + Plan.memory()
                 + Plan.kernels(("fma", "add", "rsqrt"))
                 + Plan.inkernel()
                 + Plan.memory_inkernel()
-                + Plan.serving(with_deps=False))
+                + Plan.serving(with_deps=False)
+                + Plan.slo(with_deps=False))
     else:
         raise ValueError(f"unknown plan {name!r}; choose from {PLAN_NAMES}")
     return dataclasses.replace(plan, name=name)

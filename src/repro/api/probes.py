@@ -26,6 +26,10 @@ Concrete probes wrap the existing measurement machinery:
 * :class:`ServingCostProbe` — the consumer side: one serving-engine
   prefill/decode cell, priced with the estimator against the session DB and
   wall-clock measured, predicted-vs-measured in one record (docs/serving.md).
+* :class:`SloProbe` — the end-to-end consumer: one arrival rate's serving
+  SLOs, a seeded trace replayed through both the LatencyDB-priced simulator
+  and the engine's continuous-batching slot pool (``repro.traffic``),
+  predicted-vs-measured percentiles in one record (docs/traffic.md).
 
 New probe types (energy counters, occupancy sweeps, ...) subclass
 :class:`Probe` and immediately gain caching, resumability and structured
@@ -471,9 +475,11 @@ class ServingCostProbe(Probe):
         eng = Engine(params, self.cfg, self.rt)
         if self.phase == "prefill":
             lowered, args = eng.lower_prefill(self.batch, self.prompt_len)
+            cache_len = 0                     # prefill builds, never scans, KV
         else:
+            cache_len = self.max_len if self.max_len is not None else eng.max_len
             lowered, args = eng.lower_decode(self.batch, self.prompt_len,
-                                             self.max_len)
+                                             cache_len)
         compiled = lowered.compile()
         if ctx.db is not None and getattr(ctx.db, "path", None):
             # sharded runs (Session.fan_out) give each device its own DB
@@ -488,11 +494,132 @@ class ServingCostProbe(Probe):
                                   filters=dict(ctx.env))
         report = est.estimate(compiled.as_text())
         m = ctx.timer.time_callable(compiled, *args, reps=self.reps)
+        # cache= records the KV length this cell actually priced: a decode
+        # row is meaningless without it (the scan length dominates), and
+        # lower_decode's default changed once already (prompt+32 -> max_len)
         notes = (f"phase={self.phase} batch={self.batch} "
-                 f"prompt={self.prompt_len} model={self.cfg.name} "
+                 f"prompt={self.prompt_len} cache={cache_len} "
+                 f"model={self.cfg.name} "
                  f"predicted_ns={report.total_ns:.3f} "
                  f"compute_ns={report.compute_ns:.3f} "
                  f"memory_ns={report.memory_ns:.3f} "
                  f"coverage={report.coverage:.4f} "
                  f"bound={report.bound}")
+        return self._record(ctx, m, notes=notes)
+
+
+class SloProbe(Probe):
+    """One serving-SLO point: a seeded arrival trace at one rate, replayed
+    through *both* sides of ``repro.traffic`` — the LatencyDB-priced
+    simulator (predicted) and the engine's continuous-batching slot pool
+    (measured) — and aggregated into exact-rank TTFT/TPOT/e2e percentiles.
+
+    The record's ``latency_ns`` is the **measured p50 TTFT** (the headline
+    SLO number); every other percentile, both predicted and measured, plus
+    goodput and the estimator's coverage, ride in the notes and are parsed
+    back by :func:`~repro.core.perfmodel.slopoint_from_record`. Like
+    :class:`ServingCostProbe` this is a consumer probe: it prices against
+    ``ctx.db``, so schedule it *after* the instruction/memory rows
+    (``Plan.slo`` does).
+
+    Op name ``slo.r<rate>``; a non-default trace shape (request count, slot
+    count, seed, arrival process) or model is a different experiment and
+    suffixes the cache identity, like ``MemoryProbe.steps``.
+    """
+
+    category = "slo"
+    DEFAULT_N = 12
+    DEFAULT_SLOTS = 4
+
+    def __init__(self, rate_rps: float, n_requests: int = DEFAULT_N,
+                 n_slots: int = DEFAULT_SLOTS, seed: int = 0,
+                 cfg=None, rt=None, max_len: int | None = None,
+                 process: str = "poisson", burstiness_cv: float = 1.0,
+                 prompt_len: tuple[int, int] = (4, 8),
+                 max_new: tuple[int, int] = (4, 8)):
+        default_cfg, default_rt = serving_tiny_config()
+        self.rate_rps = float(rate_rps)
+        self.n_requests = int(n_requests)
+        self.n_slots = int(n_slots)
+        self.seed = int(seed)
+        self.cfg = cfg if cfg is not None else default_cfg
+        self.rt = rt if rt is not None else default_rt
+        self.max_len = max_len
+        self.process = process
+        self.burstiness_cv = float(burstiness_cv)
+        self.prompt_len = tuple(prompt_len)
+        self.max_new = tuple(max_new)
+        self.opt_level = "O3"
+        self.dtype = self.cfg.compute_dtype
+        self.base_op = f"slo.r{self.rate_rps:g}"
+        self.op = self.base_op
+        if (self.n_requests, self.n_slots) != (self.DEFAULT_N,
+                                               self.DEFAULT_SLOTS):
+            self.op += f".n{self.n_requests}s{self.n_slots}"
+        if self.seed != 0:
+            self.op += f".seed{self.seed}"
+        if self.process != "poisson":
+            self.op += f".{self.process}{self.burstiness_cv:g}"
+        if max_len is not None:
+            self.op += f".c{int(max_len)}"
+        if self.cfg.name != default_cfg.name:
+            self.op += f".{self.cfg.name}"
+
+    def match_names(self) -> frozenset[str]:
+        # addressable by the full point name, the rate family and the
+        # whole-family row ``slo``
+        return frozenset((self.op, self.base_op, "slo"))
+
+    def trace_config(self):
+        """The (deterministic) trace recipe this point replays."""
+        from repro.traffic.traces import TraceConfig
+
+        return TraceConfig(n_requests=self.n_requests, rate_rps=self.rate_rps,
+                           seed=self.seed, process=self.process,
+                           burstiness_cv=self.burstiness_cv,
+                           prompt_len=self.prompt_len, max_new=self.max_new,
+                           vocab_size=self.cfg.vocab_size)
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        import jax
+
+        from repro.models import transformer
+        from repro.serving.engine import Engine
+        from repro.traffic.simulate import run_slo_point
+        from repro.traffic.traces import generate_trace
+
+        params = transformer.init_lm(jax.random.PRNGKey(0), self.cfg)
+        eng = Engine(params, self.cfg, self.rt)
+        trace = generate_trace(self.trace_config())
+        db = ctx.db
+        if db is None:
+            from repro.core.latency_db import LatencyDB
+
+            db = LatencyDB()
+        elif getattr(db, "path", None) and os.path.exists(db.path):
+            # pick up sibling shards' dep rows, like ServingCostProbe
+            from repro.core.latency_db import LatencyDB
+
+            db.merge(LatencyDB(db.path))
+        pred, meas, coverage = run_slo_point(
+            eng, db, trace, n_slots=self.n_slots, max_len=self.max_len,
+            opt_level=self.opt_level, filters=dict(ctx.env))
+        m = Measurement(median_ns=meas.ttft_ns[50.0], mad_ns=0.0,
+                        min_ns=meas.ttft_ns[50.0], n=self.n_requests)
+        notes = (f"rate={self.rate_rps:g} n={self.n_requests} "
+                 f"slots={self.n_slots} seed={self.seed} "
+                 f"model={self.cfg.name} "
+                 f"pred_ttft_p50_ns={pred.ttft_ns[50.0]:.1f} "
+                 f"pred_ttft_p99_ns={pred.ttft_ns[99.0]:.1f} "
+                 f"pred_tpot_p50_ns={pred.tpot_ns[50.0]:.1f} "
+                 f"pred_tpot_p99_ns={pred.tpot_ns[99.0]:.1f} "
+                 f"pred_e2e_p50_ns={pred.e2e_ns[50.0]:.1f} "
+                 f"pred_goodput_tok_s={pred.goodput_tok_s:.3f} "
+                 f"meas_ttft_p50_ns={meas.ttft_ns[50.0]:.1f} "
+                 f"meas_ttft_p99_ns={meas.ttft_ns[99.0]:.1f} "
+                 f"meas_tpot_p50_ns={meas.tpot_ns[50.0]:.1f} "
+                 f"meas_tpot_p99_ns={meas.tpot_ns[99.0]:.1f} "
+                 f"meas_e2e_p50_ns={meas.e2e_ns[50.0]:.1f} "
+                 f"meas_goodput_tok_s={meas.goodput_tok_s:.3f} "
+                 f"coverage={coverage:.4f}")
         return self._record(ctx, m, notes=notes)

@@ -26,11 +26,26 @@ class DataConfig:
     structure: int = 97   # markov-ish period so loss is learnable, not pure noise
 
 
+def philox_rng(seed: int, *counters: int) -> np.random.Generator:
+    """Counter-based deterministic RNG: one stream per ``(seed, *counters)``.
+
+    The sharding discipline of this module, exposed for reuse: a Philox
+    generator keyed on ``seed`` with up to four counter words, so any
+    consumer (the data loader's ``(step, host)`` streams, ``repro.traffic``'s
+    replayable arrival traces) derives independent, restart-exact streams
+    from pure coordinates — no sequential state to checkpoint.
+    """
+    if len(counters) > 4:
+        raise ValueError(f"Philox has a 4-word counter, got {len(counters)}")
+    counter = np.zeros(4, np.uint64)
+    counter[:len(counters)] = counters
+    return np.random.Generator(np.random.Philox(key=seed, counter=counter))
+
+
 def _host_batch(cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
     assert cfg.global_batch % cfg.n_hosts == 0
     per_host = cfg.global_batch // cfg.n_hosts
-    rng = np.random.Generator(np.random.Philox(
-        key=cfg.seed, counter=np.array([step, cfg.host_id, 0, 0], np.uint64)))
+    rng = philox_rng(cfg.seed, step, cfg.host_id)
     base = rng.integers(0, cfg.vocab_size, size=(per_host, cfg.seq_len + 1),
                         dtype=np.int64)
     # inject learnable structure: token[t] depends on token[t-1] mod `structure`

@@ -103,15 +103,29 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params
 
 def attn_decode(p: Params, x, cache: Params, pos, cfg: ModelConfig, rt: Runtime,
                 positions=None):
-    """One-token step. x: [B,1,D]; cache k/v: [B,Smax,KH,hd]; pos: scalar."""
+    """One-token step. x: [B,1,D]; cache k/v: [B,Smax,KH,hd].
+
+    ``pos`` is either a scalar (the whole batch decodes in lockstep at one
+    position — the static-batch path) or a ``[B]`` int32 array of *per-row*
+    positions (the continuous-batching path: every slot sits at its own
+    depth, so the KV write is a per-row scatter and the attention mask a
+    per-row ``kv_len``).
+    """
     b = x.shape[0]
     h = common.rmsnorm(x, p["norm"].value) if cfg.norm == "rmsnorm" else x
     q, k, v = _project_qkv(p, h, cfg)
+    pos_arr = jnp.asarray(pos, jnp.int32)
     if positions is None:
-        positions = jnp.full((b, 1), pos, jnp.int32)
+        positions = (jnp.full((b, 1), pos_arr, jnp.int32)
+                     if pos_arr.ndim == 0 else pos_arr[:, None])
     q, k = _rope(cfg, q, k, positions)
-    ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
-    cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    if pos_arr.ndim == 0:
+        ck = lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    else:
+        rows = jnp.arange(b)
+        ck = cache["k"].at[rows, pos_arr].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, pos_arr].set(v[:, 0].astype(cache["v"].dtype))
     if rt.cache_shard == "head_dim":
         # split-K layout: the in-place cache write stays shard-local (a DUS
         # into a seq-sharded buffer makes GSPMD all-gather the whole cache —

@@ -1,3 +1,3 @@
-from repro.serving.engine import Engine, GenerateResult
+from repro.serving.engine import Engine, GenerateResult, SlotPool
 
-__all__ = ["Engine", "GenerateResult"]
+__all__ = ["Engine", "GenerateResult", "SlotPool"]

@@ -1,0 +1,26 @@
+"""repro.traffic — continuous-batching serving simulator with
+perfmodel-predicted SLO percentiles.
+
+The serving-SLO loop on top of the characterization stack: seeded arrival
+traces (``traces``), one continuous-batching scheduler driving either the
+real engine or a LatencyDB-priced simulator (``scheduler`` / ``simulate``),
+and exact-rank percentile SLO metrics (``metrics``). See docs/traffic.md.
+"""
+from repro.traffic.traces import (Request, TraceConfig, generate_trace,
+                                  load_trace, save_trace)
+from repro.traffic.scheduler import (ContinuousBatchingScheduler,
+                                     EngineExecutor, Executor, RequestResult,
+                                     ScheduleResult)
+from repro.traffic.simulate import (PredictedCostModel, SimulatedExecutor,
+                                    run_slo_point, simulate)
+from repro.traffic.metrics import (RequestMetrics, SloSummary,
+                                   request_metrics, slo_table, summarize)
+
+__all__ = [
+    "Request", "TraceConfig", "generate_trace", "save_trace", "load_trace",
+    "ContinuousBatchingScheduler", "EngineExecutor", "Executor",
+    "RequestResult", "ScheduleResult",
+    "PredictedCostModel", "SimulatedExecutor", "run_slo_point", "simulate",
+    "RequestMetrics", "SloSummary", "request_metrics", "summarize",
+    "slo_table",
+]

@@ -1,0 +1,133 @@
+"""Discrete-event serving simulator priced from the measured LatencyDB.
+
+The predicted half of an SLO point: run the *same*
+:class:`~repro.traffic.scheduler.ContinuousBatchingScheduler` over the
+*same* trace, but with every prefill/decode cost supplied by
+:class:`~repro.core.perfmodel.HloLatencyEstimator` pricing the engine's real
+lowered HLO against the session DB — no hardware in the loop. Because
+scheduler policy and costs are both deterministic, the simulated timeline is
+a pure function of ``(trace, DB)``: the throughput-vs-latency curve the
+measured tables *predict*, to be held against the curve the engine actually
+produces (docs/traffic.md).
+
+Fidelity notes:
+
+* The decode step is priced **once**: the pool's step is one compiled
+  executable of fixed shape ``(n_slots, max_len)``, so its cost does not
+  depend on occupancy — exactly like the real pool, whose free slots keep
+  computing waste rows.
+* Prefill is priced per distinct prompt length (each length is its own HLO).
+* The simulator does not model eos (it cannot know what the model will
+  sample); each request runs its full ``max_new`` budget. Compare against a
+  measured run with ``eos_id=None`` for like-for-like schedules, or accept
+  the divergence as part of the model error when eos is live.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+
+from repro.traffic.scheduler import ContinuousBatchingScheduler, ScheduleResult
+from repro.traffic.traces import Request
+from repro.utils import logger
+
+
+class PredictedCostModel:
+    """Price the slot pool's prefill/decode steps from a LatencyDB.
+
+    Lowers the engine's computations (host-side XLA compile, no execution)
+    and prices the optimized HLO with the estimator — environment-filtered,
+    like ``ServingCostProbe``, so rows measured on another device never
+    price this timeline. ``coverage`` of the least-covered priced module is
+    exposed so callers can tell a measurement-backed prediction from a
+    ``default_ns``-backed one.
+    """
+
+    def __init__(self, engine, db, n_slots: int, *, max_len: int | None = None,
+                 opt_level: str = "O3", filters: dict[str, str] | None = None):
+        from repro.core.perfmodel import HloLatencyEstimator
+
+        self.engine = engine
+        self.n_slots = int(n_slots)
+        self.max_len = int(max_len) if max_len is not None else engine.max_len
+        self.est = HloLatencyEstimator(db, opt_level=opt_level,
+                                       filters=filters)
+        self.min_coverage = 1.0
+
+    def _price(self, lowered) -> float:
+        report = self.est.estimate(lowered.compile().as_text())
+        self.min_coverage = min(self.min_coverage, report.coverage)
+        return report.total_ns
+
+    @functools.lru_cache(maxsize=None)
+    def prefill_ns(self, prompt_len: int) -> float:
+        lowered, _ = self.engine.lower_prefill(1, prompt_len)
+        ns = self._price(lowered)
+        logger.debug("priced prefill plen=%d: %.0fns", prompt_len, ns)
+        return ns
+
+    @functools.lru_cache(maxsize=None)
+    def decode_ns(self) -> float:
+        lowered, _ = self.engine.lower_decode(self.n_slots, 1, self.max_len)
+        ns = self._price(lowered)
+        logger.debug("priced decode step b=%d cache=%d: %.0fns",
+                     self.n_slots, self.max_len, ns)
+        return ns
+
+
+class SimulatedExecutor:
+    """Executor protocol over a :class:`PredictedCostModel` — no hardware.
+
+    Emits placeholder tokens (the simulator cannot know what the model would
+    sample), so it must be scheduled with ``eos_id=None``: every request
+    consumes exactly its ``max_new`` budget.
+    """
+
+    def __init__(self, costs: PredictedCostModel):
+        self.costs = costs
+        self.n_slots = costs.n_slots
+        self._zeros = np.zeros((self.n_slots,), np.int32)
+
+    def admit(self, slot: int, req: Request) -> tuple[int, float]:
+        return 0, self.costs.prefill_ns(req.prompt_len)
+
+    def step(self) -> tuple[np.ndarray, float]:
+        return self._zeros, self.costs.decode_ns()
+
+    def evict(self, slot: int) -> None:
+        pass
+
+
+def simulate(trace: Sequence[Request], costs: PredictedCostModel
+             ) -> ScheduleResult:
+    """Predicted timeline of ``trace`` under the DB-priced cost model."""
+    sched = ContinuousBatchingScheduler(SimulatedExecutor(costs), eos_id=None)
+    return sched.run(trace)
+
+
+def run_slo_point(engine, db, trace: Sequence[Request], *, n_slots: int = 4,
+                  max_len: int | None = None, opt_level: str = "O3",
+                  filters: dict[str, str] | None = None, measure: bool = True):
+    """One predicted-vs-measured SLO point: the same trace through the
+    DB-priced simulator and (optionally) the real engine's slot pool.
+
+    Both sides run ``eos_id=None`` so every request consumes exactly its
+    ``max_new`` budget — the schedules differ only through step *costs*,
+    which is the quantity under test. Returns
+    ``(predicted SloSummary, measured SloSummary | None, min coverage)``.
+    """
+    from repro.traffic.metrics import summarize
+    from repro.traffic.scheduler import EngineExecutor
+
+    costs = PredictedCostModel(engine, db, n_slots, max_len=max_len,
+                               opt_level=opt_level, filters=filters)
+    pred = summarize(simulate(trace, costs))
+    meas = None
+    if measure:
+        ex = EngineExecutor(engine, n_slots, max_len=max_len,
+                            warm_lens=sorted({r.prompt_len for r in trace}))
+        meas = summarize(
+            ContinuousBatchingScheduler(ex, eos_id=None).run(trace))
+    return pred, meas, costs.min_coverage

@@ -5,6 +5,7 @@ import contextlib
 import dataclasses
 import json
 import logging
+import math
 import os
 import tempfile
 import time
@@ -131,6 +132,32 @@ def parse_kv_notes(notes: str) -> dict[str, str]:
             k, _, v = tok.partition("=")
             if k:
                 out[k] = v
+    return out
+
+
+def percentiles(samples: Iterable[float],
+                ps: Iterable[float] = (50, 90, 99)) -> dict[float, float]:
+    """Exact-rank (nearest-rank) percentiles of ``samples``.
+
+    ``percentiles(xs, (50, 90, 99))[99]`` is the smallest element with at
+    least 99% of the samples at or below it: ``sorted(xs)[ceil(p/100 * n) - 1]``
+    (``p == 0`` gives the minimum). Every returned value is an actual sample —
+    no interpolation — so a p99 over latencies is a latency some request
+    really saw, and small-sample tails aren't invented by midpoint averaging
+    (the ad-hoc ``np.quantile`` default's behavior). This is the single
+    percentile implementation for SLO reporting (``traffic.metrics``,
+    ``benchmarks/report.py``).
+    """
+    xs = sorted(float(s) for s in samples)
+    if not xs:
+        raise ValueError("percentiles() of empty sample set")
+    out: dict[float, float] = {}
+    for p in ps:
+        p = float(p)
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {p}")
+        rank = math.ceil(p / 100.0 * len(xs))
+        out[p] = xs[max(rank, 1) - 1]
     return out
 
 

@@ -307,3 +307,107 @@ def test_cli_serving_plan_smoke(tmp_path, capsys):
     out = capsys.readouterr().out
     assert rc == 0
     assert "0 measured, 3 cached, 0 failed" in out
+
+
+# ===================================================== lower_decode default
+def test_lower_decode_cache_defaults_to_engine_max_len():
+    """Regression: the default cache size used to be ``prompt_len + 32``,
+    which priced a smaller KV scan than the serving loop actually decodes
+    against. It must be the engine's configured capacity."""
+    params = transformer.init_lm(jax.random.PRNGKey(0), CFG)
+    eng = Engine(params, CFG, RT, max_len=48)
+    _, args = eng.lower_decode(1, 8)
+    cache_lens = {a.shape[2] for a in jax.tree_util.tree_leaves(args[1])}
+    assert cache_lens == {48}
+    _, args = eng.lower_decode(1, 8, 40)        # explicit override still wins
+    assert {a.shape[2] for a in jax.tree_util.tree_leaves(args[1])} == {40}
+
+
+def test_decode_cell_notes_priced_cache_size(tmp_path):
+    """A decode cell's record must say which cache size it priced (the KV
+    scan length dominates the cost); prefill cells record cache=0."""
+    from repro.utils import parse_kv_notes
+
+    _, result = _run_cell(tmp_path / "db.json", phase="decode", prompt=8)
+    (rec,) = result.records()
+    assert parse_kv_notes(rec.notes)["cache"] == "512"    # Engine default
+    _, result = _run_cell(tmp_path / "db2.json", phase="prefill", prompt=8)
+    (rec,) = result.records()
+    assert parse_kv_notes(rec.notes)["cache"] == "0"
+
+
+# ============================================================ slot-level API
+@pytest.fixture(scope="module")
+def pool_engine():
+    params = transformer.init_lm(jax.random.PRNGKey(0), CFG)
+    return Engine(params, CFG, RT, max_len=32)
+
+
+def test_slot_pool_matches_static_generate(pool_engine):
+    """Two concurrently admitted slots must each reproduce their prompt's
+    solo static-generate output exactly — per-slot cache-row isolation and
+    per-slot positions leave no cross-talk."""
+    from repro.serving import SlotPool
+
+    pool = pool_engine.slots(2)
+    assert isinstance(pool, SlotPool)
+    p0, p1 = [5, 6, 7, 8], [11, 12]
+    toks0, toks1 = [pool.admit(0, p0, max_new=4)], []
+    toks1.append(pool.admit(1, p1, max_new=4))
+    for _ in range(3):
+        out = pool.step()
+        toks0.append(int(out[0]))
+        toks1.append(int(out[1]))
+    np.testing.assert_array_equal(
+        toks0, pool_engine.generate([p0], max_new=4).tokens[0])
+    np.testing.assert_array_equal(
+        toks1, pool_engine.generate([p1], max_new=4).tokens[0])
+
+
+def test_slot_pool_recycled_slot_matches_solo_run(pool_engine):
+    """evict + admit mid-flight: the recycled slot's new request must decode
+    exactly as if it ran alone (stale KV from the previous tenant is masked
+    and overwritten), while the other slot keeps its own stream."""
+    pool = pool_engine.slots(2)
+    pool.admit(0, [5, 6, 7], max_new=2)
+    keep = [pool.admit(1, [9, 10, 11, 12], max_new=6)]
+    keep.append(int(pool.step()[1]))
+    pool.evict(0)
+    assert pool.free_slots() == [0] and pool.active_slots() == [1]
+    fresh = [pool.admit(0, [21, 22, 23], max_new=3)]
+    for _ in range(2):
+        out = pool.step()
+        fresh.append(int(out[0]))
+        keep.append(int(out[1]))
+    np.testing.assert_array_equal(
+        fresh, pool_engine.generate([[21, 22, 23]], max_new=3).tokens[0])
+    np.testing.assert_array_equal(
+        keep, pool_engine.generate([[9, 10, 11, 12]], max_new=4).tokens[0])
+
+
+def test_slot_pool_admit_validation(pool_engine):
+    pool = pool_engine.slots(1)
+    pool.admit(0, [1, 2], max_new=2)
+    with pytest.raises(ValueError, match="occupied"):
+        pool.admit(0, [3, 4])
+    pool.evict(0)
+    with pytest.raises(ValueError, match="empty prompt"):
+        pool.admit(0, [])
+    with pytest.raises(ValueError, match="max_len"):
+        pool.admit(0, [1] * 30, max_new=8)
+    with pytest.raises(ValueError, match="no active slot"):
+        pool.step()
+
+
+def test_slot_pool_sampling_is_slot_independent(pool_engine):
+    """temperature>0 streams key on (seed, uid, n_generated), so a request
+    samples the same path whichever slot it lands in."""
+    out = {}
+    for slot in (0, 1):
+        pool = pool_engine.slots(2, max_len=16)
+        pool.temperature, pool.seed = 0.8, 7
+        toks = [pool.admit(slot, [3, 4, 5], uid=42, max_new=4)]
+        for _ in range(3):
+            toks.append(int(pool.step()[slot]))
+        out[slot] = toks
+    assert out[0] == out[1]

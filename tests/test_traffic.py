@@ -1,0 +1,357 @@
+"""repro.traffic: traces, continuous-batching scheduler, simulator, metrics.
+
+The scheduler tests run against a scripted executor (deterministic costs and
+token streams, no engine) so the batching *policy* — FIFO admission, virtual
+clock, eos slot recycling — is pinned independently of model behavior; the
+engine-backed SlotPool semantics live in test_serving.py, and the end-to-end
+predicted-vs-measured loop in the slow CLI test at the bottom.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.traffic import (ContinuousBatchingScheduler, Request, TraceConfig,
+                           generate_trace, load_trace, save_trace, simulate,
+                           slo_table, summarize)
+from repro.traffic.metrics import request_metrics
+
+
+# ==================================================================== traces
+def test_trace_same_config_replays_identically():
+    cfg = TraceConfig(n_requests=16, rate_rps=40.0, seed=5)
+    assert generate_trace(cfg) == generate_trace(cfg)
+
+
+def test_trace_seed_and_rate_change_the_stream():
+    base = TraceConfig(n_requests=8, rate_rps=40.0, seed=0)
+    a = generate_trace(base)
+    import dataclasses
+
+    b = generate_trace(dataclasses.replace(base, seed=1))
+    c = generate_trace(dataclasses.replace(base, rate_rps=400.0))
+    assert a != b
+    assert [r.arrival_ns for r in a] != [r.arrival_ns for r in c]
+
+
+def test_trace_request_shape():
+    cfg = TraceConfig(n_requests=32, rate_rps=100.0, prompt_len=(2, 5),
+                      max_new=(3, 6), vocab_size=50)
+    trace = generate_trace(cfg)
+    assert [r.uid for r in trace] == list(range(32))
+    arr = [r.arrival_ns for r in trace]
+    assert arr == sorted(arr) and arr[0] > 0
+    for r in trace:
+        assert 2 <= r.prompt_len <= 5 and 3 <= r.max_new <= 6
+        assert all(1 <= t < 50 for t in r.prompt)     # 0 is the pad token
+
+
+def test_trace_gamma_burstiness_clusters_arrivals():
+    kw = dict(n_requests=400, rate_rps=100.0, seed=3, process="gamma")
+    smooth = generate_trace(TraceConfig(burstiness_cv=0.25, **kw))
+    bursty = generate_trace(TraceConfig(burstiness_cv=4.0, **kw))
+
+    def cv(trace):
+        gaps = np.diff([0.0] + [r.arrival_ns for r in trace])
+        return float(np.std(gaps) / np.mean(gaps))
+
+    assert cv(smooth) < 0.5 < 2.0 < cv(bursty)
+
+
+def test_trace_json_round_trip(tmp_path):
+    cfg = TraceConfig(n_requests=6, rate_rps=25.0, seed=9)
+    trace = generate_trace(cfg)
+    path = save_trace(str(tmp_path / "t.json"), trace, cfg)
+    assert load_trace(path) == trace
+    assert json.load(open(path))["config"]["seed"] == 9
+
+
+def test_trace_config_validation():
+    with pytest.raises(ValueError, match="n_requests"):
+        TraceConfig(n_requests=0, rate_rps=1.0)
+    with pytest.raises(ValueError, match="rate_rps"):
+        TraceConfig(n_requests=1, rate_rps=0.0)
+    with pytest.raises(ValueError, match="process"):
+        TraceConfig(n_requests=1, rate_rps=1.0, process="uniform")
+    with pytest.raises(ValueError, match="prompt_len"):
+        TraceConfig(n_requests=1, rate_rps=1.0, prompt_len=(0, 4))
+    with pytest.raises(ValueError, match="max_new"):
+        TraceConfig(n_requests=1, rate_rps=1.0, max_new=(5, 4))
+
+
+# ================================================================= scheduler
+class ScriptedExecutor:
+    """Deterministic executor: fixed admit/step costs, scripted eos tokens.
+
+    ``eos_at[uid] = k`` makes that request's k-th decode token the eos
+    (token 99); everything else emits token 7.
+    """
+
+    EOS = 99
+
+    def __init__(self, n_slots=2, admit_ns=1000.0, step_ns=500.0,
+                 eos_at=None):
+        self.n_slots = n_slots
+        self.admit_ns, self.step_ns = admit_ns, step_ns
+        self.eos_at = eos_at or {}
+        self.slot_state = {}        # slot -> [uid, tokens emitted after first]
+        self.evictions = []
+
+    def admit(self, slot, req):
+        assert slot not in self.slot_state, "admitted into an occupied slot"
+        self.slot_state[slot] = [req.uid, 0]
+        return 7, self.admit_ns
+
+    def step(self):
+        toks = np.full(self.n_slots, 7, np.int32)
+        for slot, st in self.slot_state.items():
+            st[1] += 1
+            if self.eos_at.get(st[0]) == st[1]:
+                toks[slot] = self.EOS
+        return toks, self.step_ns
+
+    def evict(self, slot):
+        self.evictions.append((slot, self.slot_state.pop(slot)[0]))
+
+
+def _req(uid, arrival_ns, max_new=8, plen=2):
+    return Request(uid=uid, arrival_ns=arrival_ns,
+                   prompt=tuple(range(1, plen + 1)), max_new=max_new)
+
+
+def test_scheduler_eos_frees_slot_for_late_request_before_batch_drains():
+    """The continuous-batching acceptance test: a request arriving while the
+    pool is full must be admitted into the slot freed by an earlier row's
+    eos, while the other request is still decoding."""
+    ex = ScriptedExecutor(n_slots=2, eos_at={0: 2})
+    trace = [_req(0, 0.0), _req(1, 0.0), _req(2, 100.0)]
+    res = ContinuousBatchingScheduler(ex, eos_id=ScriptedExecutor.EOS).run(trace)
+    by = res.by_uid()
+    assert by[0].finish_reason == "eos" and by[0].n_tokens == 3
+    assert by[2].slot == by[0].slot                 # recycled, not a new slot
+    assert by[2].admitted_ns >= by[0].finish_ns
+    assert by[2].first_token_ns < by[1].finish_ns   # before the batch drained
+    assert by[1].finish_reason == "max_new" and by[1].n_tokens == 8
+    assert res.admissions == 3 and len(res.requests) == 3
+
+
+def test_scheduler_respects_max_new_budget():
+    ex = ScriptedExecutor(n_slots=1)
+    res = ContinuousBatchingScheduler(ex).run([_req(0, 0.0, max_new=5)])
+    (rr,) = res.requests
+    assert rr.n_tokens == 5 and rr.finish_reason == "max_new"
+    # first token from prefill + 4 decode steps
+    assert res.decode_steps == 4
+    assert rr.finish_ns == pytest.approx(1000.0 + 4 * 500.0)
+
+
+def test_scheduler_single_token_request_never_decodes():
+    ex = ScriptedExecutor(n_slots=1)
+    res = ContinuousBatchingScheduler(ex).run([_req(0, 0.0, max_new=1)])
+    assert res.decode_steps == 0
+    assert res.requests[0].n_tokens == 1
+    assert ex.evictions == [(0, 0)]
+
+
+def test_scheduler_queueing_delay_lands_in_ttft():
+    """With one slot, the second request waits for the first to finish; its
+    TTFT includes that queueing delay, its e2e starts at its arrival."""
+    ex = ScriptedExecutor(n_slots=1)
+    trace = [_req(0, 0.0, max_new=3), _req(1, 0.0, max_new=3)]
+    res = ContinuousBatchingScheduler(ex).run(trace)
+    by = res.by_uid()
+    first_finish = 1000.0 + 2 * 500.0
+    assert by[1].admitted_ns == pytest.approx(first_finish)
+    m = request_metrics(by[1])
+    assert m.queue_ns == pytest.approx(first_finish)
+    assert m.ttft_ns == pytest.approx(first_finish + 1000.0)
+
+
+def test_scheduler_idle_jumps_to_next_arrival():
+    ex = ScriptedExecutor(n_slots=1)
+    trace = [_req(0, 0.0, max_new=2), _req(1, 1e9, max_new=2)]
+    res = ContinuousBatchingScheduler(ex).run(trace)
+    by = res.by_uid()
+    assert by[0].finish_ns < 1e9
+    assert by[1].admitted_ns == pytest.approx(1e9)  # not before it arrived
+
+
+def test_scheduler_deterministic_replay():
+    ex1 = ScriptedExecutor(n_slots=2, eos_at={1: 3})
+    ex2 = ScriptedExecutor(n_slots=2, eos_at={1: 3})
+    trace = generate_trace(TraceConfig(n_requests=10, rate_rps=1e6, seed=2))
+    eos = ScriptedExecutor.EOS
+    r1 = ContinuousBatchingScheduler(ex1, eos_id=eos).run(trace)
+    r2 = ContinuousBatchingScheduler(ex2, eos_id=eos).run(trace)
+    assert [(r.request.uid, r.slot, r.first_token_ns, r.finish_ns)
+            for r in r1.requests] == \
+           [(r.request.uid, r.slot, r.first_token_ns, r.finish_ns)
+            for r in r2.requests]
+
+
+# ================================================================= simulator
+class _FlatCosts:
+    """PredictedCostModel stand-in: constant prefill/decode prices."""
+
+    def __init__(self, n_slots=2, prefill=1000.0, decode=500.0):
+        self.n_slots = n_slots
+        self._p, self._d = prefill, decode
+
+    def prefill_ns(self, plen):
+        return self._p
+
+    def decode_ns(self):
+        return self._d
+
+
+def test_simulate_runs_full_budget_and_replays():
+    trace = generate_trace(TraceConfig(n_requests=8, rate_rps=50.0, seed=4))
+    a = simulate(trace, _FlatCosts())
+    b = simulate(trace, _FlatCosts())
+    assert all(rr.finish_reason == "max_new" for rr in a.requests)
+    assert [rr.n_tokens for rr in a.requests] == \
+           [r.max_new for r in sorted(trace, key=lambda r: r.uid)]
+    assert [rr.first_token_ns for rr in a.requests] == \
+           [rr.first_token_ns for rr in b.requests]   # deterministic replay
+
+
+# =================================================================== metrics
+def test_request_metrics_definitions():
+    rr_trace = [_req(0, 100.0, max_new=3)]
+    res = ContinuousBatchingScheduler(ScriptedExecutor(n_slots=1)).run(rr_trace)
+    m = request_metrics(res.requests[0])
+    # idle pool: the clock jumps to the arrival, so TTFT is pure admit cost
+    assert m.ttft_ns == pytest.approx(1000.0)
+    assert m.queue_ns == pytest.approx(0.0)
+    assert m.tpot_ns == pytest.approx(500.0)          # 2 decode steps / 2 gaps
+    assert m.e2e_ns == pytest.approx(1000.0 + 2 * 500.0)
+    assert m.n_tokens == 3
+
+
+def test_request_metrics_single_token_tpot_is_nan():
+    res = ContinuousBatchingScheduler(ScriptedExecutor(n_slots=1)).run(
+        [_req(0, 0.0, max_new=1)])
+    assert math.isnan(request_metrics(res.requests[0]).tpot_ns)
+
+
+def test_summarize_percentiles_are_actual_samples():
+    trace = [_req(i, 0.0, max_new=4) for i in range(7)]
+    res = ContinuousBatchingScheduler(ScriptedExecutor(n_slots=2)).run(trace)
+    s = summarize(res)
+    ttfts = {request_metrics(rr).ttft_ns for rr in res.requests}
+    assert set(s.ttft_ns.values()) <= ttfts      # exact-rank, no interpolation
+    assert s.n_requests == 7 and s.n_tokens == 28
+    assert s.goodput_tok_s == pytest.approx(
+        28 / (res.makespan_ns * 1e-9))
+    rec = s.as_record()
+    assert rec["ttft_p99_ns"] == s.ttft_ns[99.0]
+
+
+def test_summarize_rejects_empty():
+    from repro.traffic.scheduler import ScheduleResult
+
+    with pytest.raises(ValueError):
+        summarize(ScheduleResult([], 1, 0.0, 0, 0))
+
+
+def test_slo_table_renders_both_sides():
+    trace = [_req(i, 0.0, max_new=4) for i in range(4)]
+    res = ContinuousBatchingScheduler(ScriptedExecutor(n_slots=2)).run(trace)
+    s = summarize(res)
+    md = slo_table([{"rate_rps": 25.0, "predicted": s, "measured": s},
+                    {"rate_rps": 50.0, "predicted": s, "measured": None}])
+    lines = md.splitlines()
+    assert lines[0].startswith("| rate (req/s) | side |")
+    assert sum("predicted" in ln for ln in lines) == 2
+    assert sum("measured" in ln for ln in lines) == 1
+
+
+# ====================================================== slo points (records)
+def test_slopoint_round_trip_through_record_notes():
+    from repro.core.latency_db import LatencyRecord
+    from repro.core.perfmodel import slopoint_from_record
+
+    notes = ("rate=50 n=12 slots=4 seed=0 model=serving-tiny "
+             "pred_ttft_p50_ns=100.0 pred_ttft_p99_ns=200.0 "
+             "pred_tpot_p50_ns=50.0 pred_tpot_p99_ns=80.0 "
+             "pred_e2e_p50_ns=400.0 pred_goodput_tok_s=1000.0 "
+             "meas_ttft_p50_ns=1000.0 meas_ttft_p99_ns=2000.0 "
+             "meas_tpot_p50_ns=60.0 meas_tpot_p99_ns=90.0 "
+             "meas_e2e_p50_ns=4000.0 meas_goodput_tok_s=900.0 "
+             "coverage=0.7100")
+    rec = LatencyRecord(op="slo.r50", category="slo", dtype="float32",
+                        opt_level="O3", latency_ns=1000.0, mad_ns=0.0,
+                        cycles=0.0, guard=0, net_latency_ns=1000.0,
+                        n_samples=12, measured_at="", notes=notes,
+                        device_kind="cpu", backend="cpu", jax_version="0")
+    pt = slopoint_from_record(rec)
+    assert pt.rate_rps == 50.0 and pt.n_slots == 4 and pt.model == "serving-tiny"
+    assert pt.measured["ttft_p50_ns"] == 1000.0
+    assert pt.abs_log10_error("ttft_p50_ns") == pytest.approx(1.0)
+    assert pt.abs_log10_error("tpot_p50_ns") == pytest.approx(
+        abs(math.log10(50.0 / 60.0)))
+    assert pt.abs_log10_error("missing_metric") == float("inf")
+
+
+def test_check_slo_gate(tmp_path, capsys):
+    from benchmarks import check_slo
+    from repro.core.latency_db import LatencyDB, LatencyRecord
+
+    def rec(rate, pred, meas, coverage=0.7):
+        notes = (f"rate={rate} n=6 slots=4 seed=0 model=serving-tiny "
+                 f"pred_ttft_p50_ns={pred} meas_ttft_p50_ns={meas} "
+                 f"pred_tpot_p50_ns={pred} meas_tpot_p50_ns={meas} "
+                 f"coverage={coverage}")
+        return LatencyRecord(op=f"slo.r{rate:g}", category="slo",
+                             dtype="float32", opt_level="O3", latency_ns=meas,
+                             mad_ns=0.0, cycles=0.0, guard=0,
+                             net_latency_ns=meas, n_samples=6,
+                             measured_at="", notes=notes, device_kind="cpu",
+                             backend="cpu", jax_version="0")
+
+    db = LatencyDB(path=str(tmp_path / "db.json"))
+    db.add(rec(20, 900.0, 1000.0))
+    db.save()
+    tol = tmp_path / "tol.json"
+    tol.write_text(json.dumps({"max_abs_log10_ratio": 1.0,
+                               "min_coverage": 0.5}))
+    assert check_slo.main(["--db", db.path, "--tolerance", str(tol)]) == 0
+    assert "within tolerance" in capsys.readouterr().out
+
+    db.add(rec(50, 1.0, 1e4))            # 4 decades off -> violation
+    db.save()
+    assert check_slo.main(["--db", db.path, "--tolerance", str(tol)]) == 1
+    assert "VIOLATION" in capsys.readouterr().err
+
+    empty = LatencyDB(path=str(tmp_path / "empty.json"))
+    empty.save()
+    assert check_slo.main(["--db", empty.path,
+                           "--tolerance", str(tol)]) == 2
+
+
+# ========================================================== end-to-end (slow)
+@pytest.mark.slow
+def test_serve_slo_cli_end_to_end(tmp_path, capsys):
+    """serve-slo sweep through the Session machinery: measured + predicted
+    sides populated for every rate, cached on re-run, trace replay path."""
+    from repro.api import cli
+    from repro.core.latency_db import LatencyDB
+    from repro.core.perfmodel import slopoint_from_record
+
+    db = str(tmp_path / "db.json")
+    args = ["serve-slo", "--rates", "30,60", "--n-requests", "4",
+            "--slots", "2", "--db", db, "--reps", "1", "--warmup", "0"]
+    assert cli.main(args) == 0
+    out = capsys.readouterr().out
+    assert "0 failed" in out and "| predicted |" in out and "| measured |" in out
+
+    points = sorted((slopoint_from_record(r) for r in LatencyDB(db).records()
+                     if r.op.startswith("slo.")), key=lambda p: p.rate_rps)
+    assert [p.rate_rps for p in points] == [30.0, 60.0]
+    for p in points:
+        for metric in ("ttft_p50_ns", "ttft_p99_ns", "tpot_p50_ns"):
+            assert p.predicted[metric] > 0 and p.measured[metric] > 0
+
+    assert cli.main(args) == 0                     # all cache hits
+    assert "cached" in capsys.readouterr().out

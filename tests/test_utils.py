@@ -1,0 +1,88 @@
+"""Shared-utility contracts: exact-rank percentiles + record-notes parsing.
+
+These two helpers sit under every SLO number the traffic subsystem reports
+(``percentiles``) and every structured record the probes persist
+(``parse_kv_notes``), so their edge cases are locked down here rather than
+implicitly by their consumers.
+"""
+import pytest
+
+from repro.utils import parse_kv_notes, percentiles
+
+
+# ============================================================== percentiles
+def test_percentiles_exact_rank_small_n():
+    # nearest-rank: ceil(p/100 * n) - 1 into the sorted samples
+    xs = [10, 20, 30, 40, 50, 60, 70, 80, 90, 100]
+    got = percentiles(xs, (50, 90, 99))
+    assert got[50] == 50       # ceil(5) = rank 5
+    assert got[90] == 90       # ceil(9) = rank 9
+    assert got[99] == 100      # ceil(9.9) = rank 10
+
+
+def test_percentiles_every_value_is_a_sample():
+    xs = [3.0, 1.0, 4.0, 1.5]
+    got = percentiles(xs, (25, 50, 75, 99))
+    assert set(got.values()) <= set(xs)    # never interpolated
+
+
+def test_percentiles_single_sample():
+    got = percentiles([42.0], (0, 50, 99, 100))
+    assert all(v == 42.0 for v in got.values())
+
+
+def test_percentiles_p0_is_min_p100_is_max():
+    xs = [5, 9, 2, 7]
+    got = percentiles(xs, (0, 100))
+    assert got[0] == 2 and got[100] == 9
+
+
+def test_percentiles_unsorted_input():
+    assert percentiles([9, 1, 5], (50,))[50] == 5
+
+
+def test_percentiles_p99_small_n_is_max_not_invented():
+    # with n=4, p99 must be the max sample, not a midpoint average
+    assert percentiles([1, 2, 3, 4], (99,))[99] == 4
+
+
+def test_percentiles_rejects_empty_and_out_of_range():
+    with pytest.raises(ValueError):
+        percentiles([], (50,))
+    with pytest.raises(ValueError):
+        percentiles([1.0], (101,))
+    with pytest.raises(ValueError):
+        percentiles([1.0], (-1,))
+
+
+# ============================================================ parse_kv_notes
+def test_parse_kv_basic():
+    assert parse_kv_notes("ws=8192 line=64 space=vmem") == {
+        "ws": "8192", "line": "64", "space": "vmem"}
+
+
+def test_parse_kv_value_containing_equals():
+    # only the FIRST '=' splits: rhs keeps embedded '=' verbatim
+    # (slo.<rate> notes carry e.g. filter expressions and key=value tails)
+    kv = parse_kv_notes("expr=a=b rate=5")
+    assert kv == {"expr": "a=b", "rate": "5"}
+
+
+def test_parse_kv_empty_value_kept():
+    kv = parse_kv_notes("model= coverage=0.5")
+    assert kv["model"] == "" and kv["coverage"] == "0.5"
+
+
+def test_parse_kv_duplicate_keys_last_wins():
+    assert parse_kv_notes("k=1 k=2 k=3") == {"k": "3"}
+
+
+def test_parse_kv_ignores_free_text_and_bare_equals():
+    # free-text fragments without '=' are skipped; a bare '=' has an empty
+    # key and is dropped (empty keys are unaddressable)
+    kv = parse_kv_notes("pallas chase = ws=4096 (interpret)")
+    assert kv == {"ws": "4096"}
+
+
+def test_parse_kv_empty_string():
+    assert parse_kv_notes("") == {}
