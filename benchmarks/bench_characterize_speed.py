@@ -1,0 +1,112 @@
+"""Characterization-throughput bench: serial vs compile-ahead vs warm cache.
+
+Times the same representative 20-probe plan (``Plan.representative()`` —
+instructions, memory chases, clock overhead, one Pallas kernel) three ways:
+
+1. ``serial_cold``     — no compile cache, pipeline off: the pre-optimization
+   baseline, every probe compiles inline then times.
+2. ``pipelined_cold``  — compile-ahead pipeline on, empty persistent compile
+   cache: probe N+1's XLA compile overlaps probe N's timing.
+3. ``pipelined_warm``  — same cache directory, fresh Session: every
+   executable deserializes from disk, XLA is never invoked.
+
+Each run lands in its own throwaway LatencyDB (``force=True`` besides), so
+the result cache never short-circuits a measurement — only compile work
+varies. Emits ``results/characterize_speed.json`` with wall-clocks, the
+per-stage compile/time/flush attribution from ``ResultSet.stage_ns``, and
+compile-cache hit counters. Registered as ``characterize_speed`` in
+``python -m benchmarks.run``; also runnable standalone::
+
+    PYTHONPATH=src:. python -m benchmarks.bench_characterize_speed [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+from repro.api import Plan, Session
+from repro.core.timing import Timer
+from repro.utils import dump_json
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _stage_summary(result) -> str:
+    st = result.stage_ns
+    parts = [f"{k}={st.get(k, 0) / 1e6:.0f}ms" for k in ("compile", "time", "flush")]
+    if result.cache_stats is not None:
+        cs = result.cache_stats
+        parts.append(f"cache={cs.hits}h/{cs.misses}c")
+    return " ".join(parts)
+
+
+def _timed_run(plan, timer, db_path, **session_kw):
+    session = Session(db=db_path, timer=timer, **session_kw)
+    t0 = time.perf_counter()
+    result = session.run(plan, force=True)
+    return time.perf_counter() - t0, result
+
+
+def run_bench(timer: Timer, quick: bool = False) -> list[tuple[str, float, str]]:
+    """Three wall-clocks over one plan; CSV rows for run.py."""
+    plan = Plan.representative()
+    if quick:
+        plan = Plan(tuple(plan)[:8], name="representative-quick")
+
+    with tempfile.TemporaryDirectory(prefix="repro-xc-") as tmp:
+        cache_dir = os.path.join(tmp, "xc")
+        t_serial, r_serial = _timed_run(
+            plan, timer, os.path.join(tmp, "db_serial.json"), pipeline=False)
+        t_cold, r_cold = _timed_run(
+            plan, timer, os.path.join(tmp, "db_cold.json"),
+            compile_cache=cache_dir)
+        t_warm, r_warm = _timed_run(
+            plan, timer, os.path.join(tmp, "db_warm.json"),
+            compile_cache=cache_dir)
+
+    def stages(result):
+        return {k: v / 1e9 for k, v in result.stage_ns.items()}
+
+    dump_json({
+        "probes": len(plan),
+        "serial_cold_s": t_serial,
+        "pipelined_cold_s": t_cold,
+        "pipelined_warm_s": t_warm,
+        "speedup_pipeline": t_serial / max(t_cold, 1e-9),
+        "speedup_total": t_serial / max(t_warm, 1e-9),
+        "stages_s": {"serial_cold": stages(r_serial),
+                     "pipelined_cold": stages(r_cold),
+                     "pipelined_warm": stages(r_warm)},
+        "warm_cache": {"hits": r_warm.cache_stats.hits,
+                       "misses": r_warm.cache_stats.misses},
+    }, f"{RESULTS}/characterize_speed.json")
+
+    return [
+        ("characterize_speed.serial_cold", t_serial * 1e6,
+         f"{len(plan)} probes, no cache, no pipeline; "
+         + _stage_summary(r_serial)),
+        ("characterize_speed.pipelined_cold", t_cold * 1e6,
+         f"compile-ahead, cold cache, speedup="
+         f"{t_serial / max(t_cold, 1e-9):.2f}x; " + _stage_summary(r_cold)),
+        ("characterize_speed.pipelined_warm", t_warm * 1e6,
+         f"compile-ahead, warm cache, speedup="
+         f"{t_serial / max(t_warm, 1e-9):.2f}x; " + _stage_summary(r_warm)),
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    rows = run_bench(Timer(warmup=2, reps=10 if args.quick else 20),
+                     quick=args.quick)
+    for name, us, derived in rows:
+        print(f"{name},{us:.4f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

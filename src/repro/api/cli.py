@@ -74,6 +74,19 @@ def build_parser() -> argparse.ArgumentParser:
     ch.add_argument("--warmup", type=int, default=2)
     ch.add_argument("--reps", type=int, default=10,
                     help="timed repetitions per measurement point")
+    ch.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent compiled-executable cache directory: "
+                         "re-runs and resumed sweeps skip XLA entirely "
+                         "(docs/performance.md)")
+    ch.add_argument("--adaptive", action="store_true",
+                    help="adaptive fidelity: stop repeating a probe once its "
+                         "MAD/median converges, spend the saved reps on "
+                         "noisy rows (effective rep counts land in record "
+                         "notes as reps_eff=N)")
+    ch.add_argument("--serial", action="store_true",
+                    help="disable the compile-ahead pipeline (probe N+1's "
+                         "compile no longer overlaps probe N's timing); "
+                         "measured values are identical either way")
     ch.set_defaults(func=cmd_characterize)
 
     ss = sub.add_parser(
@@ -147,7 +160,10 @@ def cmd_characterize(args: argparse.Namespace) -> int:
 
         db = LatencyDB.recover(args.db) if args.recover else args.db
         session = Session(db=db,
-                          timer=Timer(warmup=args.warmup, reps=args.reps))
+                          timer=Timer(warmup=args.warmup, reps=args.reps),
+                          compile_cache=args.compile_cache,
+                          adaptive=args.adaptive,
+                          pipeline=not args.serial)
     except Exception as e:  # unreadable/corrupt DB file: report, don't clobber
         print(f"error: could not load DB {args.db}: {type(e).__name__}: {e} "
               "(pass --recover to salvage complete records)", file=sys.stderr)

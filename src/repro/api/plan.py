@@ -212,6 +212,24 @@ class Plan:
         return Plan(_dedupe(tuple(probes)), name="slo")
 
     @staticmethod
+    def representative(steps: tuple[int, int] = (512, 1536)) -> "Plan":
+        """The 20-probe benchmark plan ``bench_characterize_speed`` times.
+
+        One representative per latency class at O3 (the 15 ``QUICK_OPS``),
+        three memory-ladder rungs, the O3 clock-overhead row and one Pallas
+        kernel — compile-heavy enough that the pipeline/compile-cache
+        speedup is visible, small enough for CI. Kept as a named builder so
+        the bench, the invariance tests and the docs all time the *same*
+        plan.
+        """
+        return dataclasses.replace(
+            Plan.instructions(ops=QUICK_OPS, opt_levels=("O3",))
+            + Plan.memory((1 << 13, 1 << 17, 1 << 21), steps=steps)
+            + Plan.clock_overhead(("O3",))
+            + Plan.kernels(("fma",)),
+            name="representative")
+
+    @staticmethod
     def inkernel(registry: Sequence[OpSpec] | None = None,
                  ops: Iterable[str] | None = None,
                  categories: Iterable[str] | None = None,

@@ -61,6 +61,9 @@ class ProbeContext:
     db: Any = None                       # session's LatencyDB — lets consumer
                                          # probes (ServingCostProbe) price
                                          # against already-measured rows
+    compile_cache: Any = None            # CompileCache — persisted executables
+    adaptive: bool = False               # adaptive fidelity on: effective rep
+                                         # counts ride in record notes
 
 
 class Probe:
@@ -73,6 +76,14 @@ class Probe:
     dtype: dtype axis of the record key.
     category: table grouping (reuses the paper's categories; new probe kinds
         add their own, e.g. ``"memory"``, ``"overhead"``, ``"kernel"``).
+
+    Pipelining (docs/performance.md): probes may split their work into
+    :meth:`prepare` — everything XLA-bound (lowering, compiling, cache
+    loads), safe to run on the session's compile-ahead thread — and
+    :meth:`run_prepared` — everything device-bound, always on the main
+    thread so timing stays strictly serial on the device. The base-class
+    defaults keep third-party probes working unchanged: ``prepare`` returns
+    None and ``run_prepared(ctx, None)`` falls back to :meth:`run`.
     """
 
     op: str = ""
@@ -104,6 +115,20 @@ class Probe:
     def run(self, ctx: ProbeContext) -> LatencyRecord:
         raise NotImplementedError
 
+    def prepare(self, ctx: ProbeContext) -> Any:
+        """XLA-bound half: compile this probe's callables, no device timing.
+
+        Runs on the session's compile-ahead thread in pipelined mode (and
+        inline in serial mode). The default returns None, which makes
+        :meth:`run_prepared` fall back to :meth:`run` — third-party probes
+        that only implement ``run`` keep working.
+        """
+        return None
+
+    def run_prepared(self, ctx: ProbeContext, prepared: Any) -> LatencyRecord:
+        """Device-bound half: time the callables ``prepare`` built."""
+        return self.run(ctx)
+
     # ------------------------------------------------------------------ util
     def _record(self, ctx: ProbeContext, m: Measurement, *, guard: int = 0,
                 notes: str = "", baseline: float | None = None) -> LatencyRecord:
@@ -112,6 +137,10 @@ class Probe:
         ``baseline`` overrides the session's dispatch-level add baseline for
         probes whose guard ops run under a different methodology (in-kernel).
         """
+        if ctx.adaptive:
+            # the convergence rule may have stopped early (or banked reps may
+            # have extended the run): persist the effective sample count
+            notes = (notes + " " if notes else "") + f"reps_eff={m.n}"
         ns = max(m.median_ns, 0.0)
         if guard:
             base = baseline if baseline is not None else ctx.baseline_ns(self.opt_level)
@@ -142,6 +171,16 @@ class InstructionProbe(Probe):
         m = measure.measure_op_full(self.spec, self.opt_level, ctx.timer)
         return self._record(ctx, m, guard=self.spec.guard, notes=self.spec.notes)
 
+    def prepare(self, ctx: ProbeContext):
+        return measure.prepare_op(self.spec, self.opt_level,
+                                  cache=ctx.compile_cache, env=ctx.env)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        if prepared is None:
+            return self.run(ctx)
+        m = measure.run_prepared_op(prepared, ctx.timer)
+        return self._record(ctx, m, guard=self.spec.guard, notes=self.spec.notes)
+
 
 class ClockOverheadProbe(Probe):
     """Cost of the timed region itself at one opt level (paper Fig. 5)."""
@@ -153,12 +192,31 @@ class ClockOverheadProbe(Probe):
         self.opt_level = opt_level
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
+        return self.run_prepared(ctx, self.prepare(ctx))
+
+    def prepare(self, ctx: ProbeContext):
+        import jax
         import jax.numpy as jnp
 
         from repro.core.optlevels import compile_at_level
 
         x = jnp.asarray(1.0, jnp.float32)
-        fn = compile_at_level(lambda v: v, self.opt_level, x)
+        if self.opt_level != "O0" and ctx.compile_cache is not None:
+            from repro.core.compile_cache import fidelity_key
+
+            key = fidelity_key(ctx.env, self.op, self.opt_level,
+                               self.dtype, "null")
+            fn, _, _ = ctx.compile_cache.load_or_compile(
+                key, lambda: measure._aot_compile(lambda v: v,
+                                                  self.opt_level, x))
+        else:
+            fn = compile_at_level(lambda v: v, self.opt_level, x)
+        return (fn, x)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        if prepared is None:
+            return self.run(ctx)
+        fn, x = prepared
         m = ctx.timer.time_callable(fn, x, reps=measure._REPS[self.opt_level])
         return self._record(ctx, m, notes="null timed region (Fig. 5 analog)")
 
@@ -195,9 +253,18 @@ class MemoryProbe(Probe):
         return frozenset((self.op, self.base_op, "mem"))
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
-        pt = membench.measure_latency(self.working_set_bytes,
+        return self.run_prepared(ctx, self.prepare(ctx))
+
+    def prepare(self, ctx: ProbeContext):
+        return membench.prepare_chase(self.working_set_bytes,
                                       line_bytes=self.line_bytes,
-                                      timer=ctx.timer, steps=self.steps)
+                                      steps=self.steps,
+                                      cache=ctx.compile_cache, env=ctx.env)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        if prepared is None:
+            return self.run(ctx)
+        pt = membench.run_prepared_chase(prepared, ctx.timer)
         m = Measurement(median_ns=pt.latency_ns, mad_ns=0.0,
                         min_ns=pt.latency_ns, n=ctx.timer.reps)
         return self._record(
@@ -237,16 +304,37 @@ class KernelProbe(Probe):
         return frozenset((self.op, self.base_op, self.kernel_op))
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
+        return self.run_prepared(ctx, self.prepare(ctx))
+
+    def prepare(self, ctx: ProbeContext):
         import jax.numpy as jnp
 
+        from repro.inkernel.measure import _cached_aot
         from repro.kernels.ops import alu_chain
 
         x = jnp.full(self.shape, 1.0, jnp.float32)
         a = jnp.full(self.shape, 0.5, jnp.float32)
+        fns = {}
 
         def fn_by_len(n: int):
-            return lambda x, a: alu_chain(x, a, n=n, op=self.kernel_op)
+            if n not in fns:
+                raw = lambda x, a, n=n: alu_chain(x, a, n=n,  # noqa: E731
+                                                  op=self.kernel_op)
+                fns[n] = _cached_aot(raw, (x, a), self.base_op,
+                                     f"chain{n}.{self.kernel_op}."
+                                     f"t{self.shape[0]}x{self.shape[1]}",
+                                     ctx.compile_cache, ctx.env,
+                                     dtype="float32")
+            return fns[n]
 
+        fn_by_len(self.lens[0])
+        fn_by_len(self.lens[1])
+        return (fn_by_len, x, a)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        if prepared is None:
+            return self.run(ctx)
+        fn_by_len, x, a = prepared
         m = ctx.timer.slope(fn_by_len, *self.lens, x, a, reps=self.reps)
         return self._record(
             ctx, m, notes=f"pallas alu_chain tile={self.shape} lens={self.lens}")
@@ -322,6 +410,26 @@ class KernelChainProbe(Probe):
         m = inkernel.measure_inkernel_full(self.spec, lens=self.lens,
                                            shape=self.shape, timer=ctx.timer,
                                            reps=self.reps)
+        return self._finish(ctx, m)
+
+    def prepare(self, ctx: ProbeContext):
+        from repro import inkernel
+
+        return inkernel.prepare_inkernel(self.spec, lens=self.lens,
+                                         shape=self.shape, reps=self.reps,
+                                         cache=ctx.compile_cache, env=ctx.env)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        from repro import inkernel
+
+        if prepared is None:
+            return self.run(ctx)
+        m = inkernel.run_prepared_inkernel(prepared, ctx.timer)
+        return self._finish(ctx, m)
+
+    def _finish(self, ctx: ProbeContext, m: Measurement) -> LatencyRecord:
+        from repro import inkernel
+
         baseline = self._inkernel_baseline_ns(ctx) if self.spec.guard else None
         return self._record(
             ctx, m, guard=self.spec.guard, baseline=baseline,
@@ -391,6 +499,26 @@ class MemoryChaseProbe(Probe):
             self.working_set_bytes, line_bytes=self.line_bytes,
             lens=self.lens, timer=ctx.timer, memory_space=self.memory_space,
             reps=self.reps)
+        return self._finish(ctx, m, space)
+
+    def prepare(self, ctx: ProbeContext):
+        from repro import inkernel
+
+        return inkernel.prepare_chase(
+            self.working_set_bytes, line_bytes=self.line_bytes,
+            lens=self.lens, memory_space=self.memory_space, reps=self.reps,
+            cache=ctx.compile_cache, env=ctx.env)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        from repro import inkernel
+
+        if prepared is None:
+            return self.run(ctx)
+        m, space = inkernel.run_prepared_chase(prepared, ctx.timer)
+        return self._finish(ctx, m, space)
+
+    def _finish(self, ctx: ProbeContext, m: Measurement,
+                space: str) -> LatencyRecord:
         return self._record(
             ctx, m, notes=f"pallas chase ws={self.working_set_bytes} "
                           f"line={self.line_bytes} space={space} "
@@ -465,9 +593,19 @@ class ServingCostProbe(Probe):
                           f"serving.{self.phase}", "serving"))
 
     def run(self, ctx: ProbeContext) -> LatencyRecord:
+        return self.run_prepared(ctx, self.prepare(ctx))
+
+    def prepare(self, ctx: ProbeContext):
+        """Init params, lower the cell and compile it (via the compile cache).
+
+        The lowering itself always runs (it is what produces the call args);
+        only the XLA backend compile — the expensive part — is skipped on a
+        cache hit. The optimized HLO text rides in the cache entry's
+        ``extra`` payload because a deserialized executable cannot be asked
+        for ``as_text()`` on every backend.
+        """
         import jax
 
-        from repro.core.perfmodel import HloLatencyEstimator
         from repro.models import transformer
         from repro.serving.engine import Engine
 
@@ -480,7 +618,31 @@ class ServingCostProbe(Probe):
             cache_len = self.max_len if self.max_len is not None else eng.max_len
             lowered, args = eng.lower_decode(self.batch, self.prompt_len,
                                              cache_len)
-        compiled = lowered.compile()
+        if ctx.compile_cache is not None:
+            from repro.core.compile_cache import fidelity_key
+
+            key = fidelity_key(ctx.env, self.op, self.opt_level, self.dtype,
+                               f"cache{cache_len}")
+            compiled, hlo, _ = ctx.compile_cache.load_or_compile(
+                key, lowered.compile, extra=lambda c: c.as_text())
+        else:
+            compiled = lowered.compile()
+            hlo = None
+        if hlo is None:
+            try:
+                hlo = compiled.as_text()
+            except Exception:  # noqa: BLE001 - deserialized executable
+                hlo = ""
+        return (compiled, args, hlo, cache_len)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        import jax
+
+        from repro.core.perfmodel import HloLatencyEstimator
+
+        if prepared is None:
+            return self.run(ctx)
+        compiled, args, hlo, cache_len = prepared
         if ctx.db is not None and getattr(ctx.db, "path", None):
             # sharded runs (Session.fan_out) give each device its own DB
             # copy; sibling shards flush their dep rows to the shared path
@@ -492,7 +654,7 @@ class ServingCostProbe(Probe):
                 ctx.db.merge(LatencyDB(ctx.db.path))
         est = HloLatencyEstimator(ctx.db, opt_level=self.opt_level,
                                   filters=dict(ctx.env))
-        report = est.estimate(compiled.as_text())
+        report = est.estimate(hlo)
         m = ctx.timer.time_callable(compiled, *args, reps=self.reps)
         # cache= records the KV length this cell actually priced: a decode
         # row is meaningless without it (the scan length dominates), and
@@ -525,6 +687,12 @@ class SloProbe(Probe):
     Op name ``slo.r<rate>``; a non-default trace shape (request count, slot
     count, seed, arrival process) or model is a different experiment and
     suffixes the cache identity, like ``MemoryProbe.steps``.
+
+    This probe intentionally has no ``prepare``/``run_prepared`` split: its
+    wall clock is dominated by the slot-pool trace replay, not by XLA
+    compiles, and it consumes rows sibling probes may still be flushing —
+    the base-class fallback (``run_prepared(ctx, None) -> run``) schedules
+    it correctly in pipelined sessions.
     """
 
     category = "slo"

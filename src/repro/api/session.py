@@ -7,12 +7,26 @@ executes :class:`Plan`\\ s **incrementally**:
 
 * probes whose cache key already exists in the DB are skipped (``force=True``
   re-measures);
-* the DB is flushed to disk after *every* probe, so an interrupted sweep
-  resumes for free: re-run the same plan and completed probes are cache hits;
+* after every measured/failed probe the new rows are appended to the DB's
+  journal (:meth:`LatencyDB.flush` — a delta write, not a whole-file
+  rewrite), so an interrupted sweep resumes for free: re-run the same plan
+  and completed probes are cache hits; the run's final ``save`` compacts the
+  journal into one atomic whole-file write;
 * a probe that raises is recorded as a structured :class:`ProbeFailure` in
   the DB (and superseded when a later run of the same probe succeeds) instead
   of vanishing into a log line. ``KeyboardInterrupt`` is *not* swallowed —
   partial results are already on disk.
+
+Runs are **pipelined** by default (``pipeline=False`` for strictly serial
+execution): a single background compile thread runs probe N+1's
+:meth:`Probe.prepare` (lowering, XLA compiles, compile-cache loads) while
+probe N's :meth:`Probe.run_prepared` times on the main thread — timing stays
+strictly serial on the device, only compilation overlaps it. With a
+persistent :class:`~repro.core.compile_cache.CompileCache` attached
+(``compile_cache=...``), re-runs skip XLA entirely; with
+``adaptive=True``, quiet rows stop repeating once their MAD/median
+converges and the saved reps are spent on noisy ones
+(:class:`~repro.core.timing.AdaptiveFidelity`). See docs/performance.md.
 
 A session may be **pinned to one device** (``Session(device=...)``): the
 environment fingerprint, the timer, the guard baseline and every probe
@@ -39,17 +53,34 @@ from __future__ import annotations
 import concurrent.futures
 import contextlib
 import dataclasses
+import time
+from typing import Any
 
 import jax
 
 from repro.core import chains, measure
+from repro.core.compile_cache import CompileCache
 from repro.core.latency_db import (LatencyDB, LatencyRecord, ProbeFailure,
                                    current_environment)
-from repro.core.timing import Timer
+from repro.core.timing import AdaptiveFidelity, Timer
 from repro.utils import logger, timestamp
 
 from repro.api.plan import Plan
 from repro.api.probes import Probe, ProbeContext
+
+
+def _prepare_probe(probe: Probe, ctx: ProbeContext) -> Any:
+    """Probe's XLA-bound half. Probes are duck-typed: one that predates the
+    prepare/run_prepared split (only implements ``run``) prepares nothing."""
+    prep = getattr(probe, "prepare", None)
+    return prep(ctx) if prep is not None else None
+
+
+def _execute_probe(probe: Probe, ctx: ProbeContext, prepared: Any):
+    run_prepared = getattr(probe, "run_prepared", None)
+    if run_prepared is not None:
+        return run_prepared(ctx, prepared)
+    return probe.run(ctx)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +99,11 @@ class ResultSet:
 
     results: list[ProbeResult]
     db: LatencyDB
+    # wall-clock attribution for this run: {"compile", "time", "flush"} in ns
+    stage_ns: dict = dataclasses.field(default_factory=dict)
+    # CompileCache hit/compile counters for THIS run (a delta, not the
+    # cache's lifetime totals); None when no cache was configured
+    cache_stats: Any = None
 
     @property
     def measured(self) -> list[ProbeResult]:
@@ -85,8 +121,12 @@ class ResultSet:
         return [r.record for r in self.results if r.record is not None]
 
     def summary(self) -> str:
-        return (f"{len(self.measured)} measured, {len(self.cached)} cached, "
-                f"{len(self.failed)} failed ({len(self.results)} probes)")
+        s = (f"{len(self.measured)} measured, {len(self.cached)} cached, "
+             f"{len(self.failed)} failed ({len(self.results)} probes)")
+        if self.cache_stats is not None:
+            st = self.cache_stats
+            s += f", compile cache: {st.hits} hits, {st.misses} compiled"
+        return s
 
     def table_markdown(self, opt_levels: tuple[str, ...] = ("O3", "O0")) -> str:
         return self.db.table_markdown(opt_levels=opt_levels)
@@ -108,11 +148,21 @@ class Session:
         into ``jax.devices()``). The environment fingerprint, every probe
         execution, the timer and the guard baseline all derive from *this*
         device; ``None`` keeps the process default (single-device behavior).
+    compile_cache: a :class:`CompileCache`, a directory path for one, or
+        None (no executable persistence). Shared across fan-out shards.
+    adaptive: True for default :class:`AdaptiveFidelity`, an instance for
+        custom thresholds, or None/False to keep fixed rep counts.
+    pipeline: overlap probe N+1's compile with probe N's timing (default).
+        ``False`` restores strictly serial prepare-then-run execution; the
+        measured values are identical either way (only compilation is
+        overlapped, never timing).
     """
 
     def __init__(self, db: LatencyDB | str | None = None,
                  timer: Timer | None = None, force: bool = False,
-                 device=None):
+                 device=None, compile_cache: CompileCache | str | None = None,
+                 adaptive: AdaptiveFidelity | bool | None = None,
+                 pipeline: bool = True):
         if isinstance(device, int):
             device = jax.devices()[device]
         self.device = device
@@ -127,6 +177,17 @@ class Session:
                 raise ValueError(
                     f"timer is pinned to {self.timer.device}, session to "
                     f"{self.device}; give each pinned session its own timer")
+        if isinstance(compile_cache, str):
+            compile_cache = CompileCache(compile_cache)
+        self.compile_cache = compile_cache
+        if adaptive is True:
+            adaptive = AdaptiveFidelity()
+        elif adaptive is False:
+            adaptive = None
+        self.adaptive = adaptive
+        if adaptive is not None:
+            self.timer.adaptive = adaptive
+        self.pipeline = pipeline
         self.force = force
         self.env = current_environment(device)
         self._baseline: dict[tuple, float] = {}
@@ -177,50 +238,144 @@ class Session:
                             clock_hz=self.timer.calibrate_clock_hz(),
                             baseline_ns=lambda lv: self.baseline_ns(
                                 lv, use_db=not force),
-                            device=self.device, db=self.db)
+                            device=self.device, db=self.db,
+                            compile_cache=self.compile_cache,
+                            adaptive=self.adaptive is not None)
 
     # ------------------------------------------------------------ execution
-    def run(self, plan: Plan, force: bool | None = None) -> ResultSet:
+    def run(self, plan: Plan, force: bool | None = None,
+            pipeline: bool | None = None) -> ResultSet:
         """Execute a plan incrementally; returns per-probe outcomes.
 
-        Probes run sequentially (timing probes must not contend with each
-        other). After every measured/failed probe the DB is flushed to its
-        path, so interrupting a sweep loses at most the in-flight probe.
+        Timing runs strictly sequentially on the main thread (timing probes
+        must not contend with each other). In pipelined mode a single
+        background thread runs the *next* probe's ``prepare`` (compiles)
+        while the current probe times. After every measured/failed probe the
+        new rows are journal-appended to the DB path (cheap delta flush), so
+        interrupting a sweep loses at most the in-flight probe; a completed
+        run compacts the journal into the main DB file.
         """
         force = self.force if force is None else force
+        pipeline = self.pipeline if pipeline is None else pipeline
         plan = plan.dedupe()
         ctx = self._context(force=force)
-        results: list[ProbeResult] = []
-        for probe in plan:
+        probes = list(plan)
+        results: dict[int, ProbeResult] = {}
+        pending: list[tuple[int, Probe]] = []
+        for i, probe in enumerate(probes):
             key = probe.key(self.env)
             if not force and key in self.db:
-                results.append(ProbeResult(probe, "cached", record=self.db.get(key)))
+                results[i] = ProbeResult(probe, "cached", record=self.db.get(key))
                 logger.debug("cached   %-28s", probe.op + "@" + probe.opt_level)
-                continue
+            else:
+                pending.append((i, probe))
+        stage_ns = {"compile": 0, "time": 0, "flush": 0}
+        stats0 = (dataclasses.replace(self.compile_cache.stats)
+                  if self.compile_cache is not None else None)
+        if pending:
+            if pipeline and len(pending) > 1:
+                self._run_pipelined(pending, ctx, results, stage_ns)
+            else:
+                self._run_serial(pending, ctx, results, stage_ns)
+        if self.db.path:
+            t0 = time.perf_counter_ns()
+            self.db.save()  # compact the journal into one atomic write
+            stage_ns["flush"] += time.perf_counter_ns() - t0
+        cache_stats = None
+        if stats0 is not None:
+            now = self.compile_cache.stats
+            cache_stats = dataclasses.replace(
+                now, hits=now.hits - stats0.hits,
+                misses=now.misses - stats0.misses,
+                stores=now.stores - stats0.stores,
+                evictions=now.evictions - stats0.evictions,
+                errors=now.errors - stats0.errors)
+        return ResultSet(results=[results[i] for i in range(len(probes))],
+                         db=self.db, stage_ns=stage_ns,
+                         cache_stats=cache_stats)
+
+    def _run_serial(self, pending, ctx, results, stage_ns) -> None:
+        """prepare + run_prepared inline, one probe at a time."""
+        for i, probe in pending:
+            t0 = time.perf_counter_ns()
+            prepared, exc = None, None
             try:
                 with self._device_ctx():
-                    rec = probe.run(ctx)
-            except Exception as e:  # noqa: BLE001 - recorded as structured failure
-                failure = ProbeFailure(
-                    op=probe.op, dtype=probe.dtype, opt_level=probe.opt_level,
-                    error_type=type(e).__name__, message=str(e),
-                    failed_at=timestamp(), **self.env)
-                self.db.add_failure(failure)
-                results.append(ProbeResult(probe, "failed", failure=failure))
-                logger.warning("probe %s@%s failed: %s: %s", probe.op,
-                               probe.opt_level, type(e).__name__, e)
+                    prepared = _prepare_probe(probe, ctx)
+            except Exception as e:  # noqa: BLE001 - structured failure below
+                exc = e
+            stage_ns["compile"] += time.perf_counter_ns() - t0
+            self._finish_probe(i, probe, ctx, prepared, exc, results, stage_ns)
+
+    def _run_pipelined(self, pending, ctx, results, stage_ns) -> None:
+        """Compile-ahead: the worker prepares probe N+1 while N times.
+
+        One worker thread, and ``prepare`` only compiles — all timing stays
+        on the main thread, so probes never contend for the device while
+        being measured. The ``jax.default_device`` scope is thread-local and
+        therefore re-entered inside the worker task.
+        """
+        def _prepare(probe: Probe):
+            t0 = time.perf_counter_ns()
+            try:
+                with self._device_ctx():
+                    prepared = _prepare_probe(probe, ctx)
+                return prepared, None, time.perf_counter_ns() - t0
+            except Exception as e:  # noqa: BLE001 - structured failure later
+                return None, e, time.perf_counter_ns() - t0
+
+        pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-compile")
+        try:
+            fut = pool.submit(_prepare, pending[0][1])
+            for j, (i, probe) in enumerate(pending):
+                cur = fut
+                if j + 1 < len(pending):
+                    # enqueue the next compile BEFORE waiting on this one:
+                    # the worker moves straight on to probe N+1 while the
+                    # main thread times probe N below
+                    fut = pool.submit(_prepare, pending[j + 1][1])
+                prepared, exc, compile_ns = cur.result()
+                stage_ns["compile"] += compile_ns
+                self._finish_probe(i, probe, ctx, prepared, exc, results,
+                                   stage_ns)
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+
+    def _finish_probe(self, i, probe, ctx, prepared, exc, results,
+                      stage_ns) -> None:
+        """Time one prepared probe on the main thread and record the outcome."""
+        if exc is None:
+            t0 = time.perf_counter_ns()
+            try:
+                with self._device_ctx():
+                    rec = _execute_probe(probe, ctx, prepared)
+            except Exception as e:  # noqa: BLE001 - recorded as failure
+                exc = e
             else:
                 self.db.add(rec)
-                results.append(ProbeResult(probe, "measured", record=rec))
+                results[i] = ProbeResult(probe, "measured", record=rec)
                 logger.info("measured %-28s %8.1fns (±%.1f)",
                             f"{probe.op}@{probe.opt_level}", rec.latency_ns,
                             rec.mad_ns)
-            self._flush()
-        return ResultSet(results=results, db=self.db)
+            stage_ns["time"] += time.perf_counter_ns() - t0
+        if exc is not None:
+            failure = ProbeFailure(
+                op=probe.op, dtype=probe.dtype, opt_level=probe.opt_level,
+                error_type=type(exc).__name__, message=str(exc),
+                failed_at=timestamp(), **self.env)
+            self.db.add_failure(failure)
+            results[i] = ProbeResult(probe, "failed", failure=failure)
+            logger.warning("probe %s@%s failed: %s: %s", probe.op,
+                           probe.opt_level, type(exc).__name__, exc)
+        t0 = time.perf_counter_ns()
+        self._flush()
+        stage_ns["flush"] += time.perf_counter_ns() - t0
 
     def _flush(self) -> None:
+        """Per-probe durability point: journal-append the new rows only."""
         if self.db.path:
-            self.db.save()
+            self.db.flush()
 
     # -------------------------------------------------------------- fan-out
     def fan_out(self, plan: Plan, devices=None, force: bool | None = None
@@ -252,8 +407,11 @@ class Session:
         sessions = [
             Session(db=LatencyDB(path=self.db.path),
                     timer=Timer(warmup=self.timer.warmup, reps=self.timer.reps,
-                                clock_hz=clock_hz, device=dev),
-                    force=force, device=dev)
+                                clock_hz=clock_hz, device=dev,
+                                adaptive=self.adaptive),
+                    force=force, device=dev,
+                    compile_cache=self.compile_cache,  # thread-safe, shared
+                    adaptive=self.adaptive, pipeline=self.pipeline)
             for dev in devices]
         logger.info("fan-out: plan '%s' (%d probes) over %d device(s)",
                     plan.name, len(plan), len(devices))
@@ -264,7 +422,8 @@ class Session:
                        for sess, shard in zip(sessions, shards) if len(shard)]
             shard_results = [f.result() for f in futures]
         self.db.merge(*(sess.db for sess in sessions))
-        self._flush()
+        if self.db.path:
+            self.db.save()  # compaction: one atomic whole-file write
         return ResultSet(
             results=[r for rs in shard_results for r in rs.results],
             db=self.db)

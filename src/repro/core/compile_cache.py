@@ -1,0 +1,206 @@
+"""Persistent on-disk cache of compiled XLA executables (docs/performance.md).
+
+Characterization spends most of its wall clock inside XLA: every probe lowers
+and compiles its measurement callables before a single nanosecond is timed.
+Those executables are pure functions of the probe identity, so re-runs and
+resumed sweeps can skip XLA entirely. :class:`CompileCache` persists serialized
+executables keyed like the :class:`~repro.core.latency_db.LatencyDB` —
+``(device_kind, backend, jax_version, op, opt_level, dtype, fidelity)`` — where
+``fidelity`` carries the compile-relevant measurement parameters (chain length,
+chase steps, tile shape), exactly the axes the DB op names suffix.
+
+Entries are stored one-per-file under the cache root (filename = SHA-256 of the
+key), written atomically (unique temp + rename) so concurrent sessions —
+`Session.fan_out` shard threads, parallel CLI runs — never observe a torn
+entry. Serialization uses :mod:`jax.experimental.serialize_executable`; on
+backends/jax versions where that is unavailable the cache degrades gracefully
+to compile-always (every lookup is a miss, nothing is stored, measurement is
+unaffected).
+
+Eviction: the cache is bounded by ``max_entries``; when a store pushes it past
+the bound, the oldest entries by mtime are removed (loads touch mtime, so the
+policy is LRU-ish). The default bound comfortably holds several full-plan
+sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import tempfile
+import threading
+from typing import Any, Callable
+
+from repro.utils import logger
+
+# Bump when the entry layout changes: old-format files then miss instead of
+# failing to unpickle into the new shape.
+_FORMAT = 1
+
+
+def _serializer():
+    """The (serialize, deserialize_and_load) pair, or None when unsupported."""
+    try:
+        from jax.experimental import serialize_executable as se
+
+        return se.serialize, se.deserialize_and_load
+    except Exception:  # noqa: BLE001 - jax too old / backend unsupported
+        return None
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters surfaced in ``ResultSet.summary()`` / the speed bench."""
+
+    hits: int = 0
+    misses: int = 0   # lookups that had to compile (and tried to store)
+    stores: int = 0
+    evictions: int = 0
+    errors: int = 0   # entries that failed to (de)serialize (treated as miss)
+
+
+class CompileCache:
+    """On-disk executable cache; see module docstring.
+
+    Thread-safe: counters and eviction run under a lock, entry files are
+    written atomically. Safe to share across `fan_out` shard threads.
+    """
+
+    def __init__(self, root: str, max_entries: int = 1024):
+        self.root = os.path.abspath(root)
+        self.max_entries = int(max_entries)
+        self.stats = CacheStats()
+        self._lock = threading.Lock()
+        os.makedirs(self.root, exist_ok=True)
+
+    # ------------------------------------------------------------------ keys
+    def entry_path(self, key: tuple) -> str:
+        digest = hashlib.sha256(repr((_FORMAT,) + tuple(key)).encode()).hexdigest()
+        return os.path.join(self.root, digest + ".xc")
+
+    # ------------------------------------------------------------------- api
+    def load(self, key: tuple) -> tuple[Any, Any] | None:
+        """Deserialize the executable cached under ``key``.
+
+        Returns ``(compiled, extra)`` or None on miss/unsupported. ``extra``
+        is the caller-provided payload stored alongside (e.g. the optimized
+        HLO text a consumer probe prices) — None when none was stored.
+        """
+        ser = _serializer()
+        path = self.entry_path(key)
+        if ser is None or not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                entry = pickle.load(f)
+            compiled = ser[1](entry["blob"], entry["in_tree"], entry["out_tree"])
+            os.utime(path)  # touch: keep hot entries out of eviction's way
+        except Exception as e:  # noqa: BLE001 - stale/foreign entry: recompile
+            with self._lock:
+                self.stats.errors += 1
+            logger.debug("compile cache entry %s unreadable (%s); recompiling",
+                         path, type(e).__name__)
+            return None
+        return compiled, entry.get("extra")
+
+    def store(self, key: tuple, compiled: Any, extra: Any = None) -> bool:
+        """Serialize ``compiled`` under ``key``; False when unsupported."""
+        ser = _serializer()
+        if ser is None:
+            return False
+        try:
+            blob, in_tree, out_tree = ser[0](compiled)
+            payload = pickle.dumps({"key": tuple(key), "blob": blob,
+                                    "in_tree": in_tree, "out_tree": out_tree,
+                                    "extra": extra})
+        except Exception as e:  # noqa: BLE001 - unpicklable executable: skip
+            with self._lock:
+                self.stats.errors += 1
+            logger.debug("compile cache cannot serialize %s: %s: %s",
+                         key, type(e).__name__, e)
+            return False
+        path = self.entry_path(key)
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        with self._lock:
+            self.stats.stores += 1
+        self._evict()
+        return True
+
+    def load_or_compile(self, key: tuple, build: Callable[[], Any],
+                        extra: Callable[[Any], Any] | None = None
+                        ) -> tuple[Any, Any, bool]:
+        """The one-call form probes use: ``(compiled, extra, was_hit)``.
+
+        On a miss, ``build()`` compiles the executable, ``extra(compiled)``
+        (when given) derives the sidecar payload, and both are stored for the
+        next run.
+        """
+        cached = self.load(key)
+        if cached is not None:
+            with self._lock:
+                self.stats.hits += 1
+            return cached[0], cached[1], True
+        compiled = build()
+        with self._lock:
+            self.stats.misses += 1
+        side = extra(compiled) if extra is not None else None
+        self.store(key, compiled, extra=side)
+        return compiled, side, False
+
+    # ------------------------------------------------------------- lifecycle
+    def entries(self) -> list[str]:
+        try:
+            return [os.path.join(self.root, n) for n in os.listdir(self.root)
+                    if n.endswith(".xc")]
+        except OSError:
+            return []
+
+    def _evict(self) -> None:
+        with self._lock:
+            paths = self.entries()
+            if len(paths) <= self.max_entries:
+                return
+            def mtime(p: str) -> float:
+                try:
+                    return os.stat(p).st_mtime
+                except OSError:
+                    return 0.0
+            paths.sort(key=mtime)
+            for p in paths[: len(paths) - self.max_entries]:
+                try:
+                    os.unlink(p)
+                    self.stats.evictions += 1
+                except OSError:
+                    pass
+
+    def clear(self) -> None:
+        for p in self.entries():
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return len(self.entries())
+
+    def __repr__(self) -> str:
+        return (f"CompileCache({self.root!r}, entries={len(self)}, "
+                f"hits={self.stats.hits}, misses={self.stats.misses})")
+
+
+def fidelity_key(env: Any, op: str, opt_level: str, dtype: str,
+                 fidelity: str) -> tuple:
+    """Cache key layout: the DB record key plus a fidelity tail."""
+    return (env["device_kind"], env["backend"], env["jax_version"],
+            op, opt_level, dtype, fidelity)

@@ -108,19 +108,30 @@ def _flush_lock(path: str):
             fcntl.flock(lockf, fcntl.LOCK_UN)
 
 
+def _journal_path(path: str) -> str:
+    return path + ".journal"
+
+
 class LatencyDB:
     def __init__(self, path: str | None = None):
         self.path = path
         self._records: dict[tuple, LatencyRecord] = {}
         self._failures: dict[tuple, ProbeFailure] = {}
         self._disk_state: tuple | None = None
+        self._dirty_records: set[tuple] = set()
+        self._dirty_failures: set[tuple] = set()
         if path and os.path.exists(path):
             self.load(path)
+        elif path and os.path.exists(_journal_path(path)):
+            # Crashed before the first compaction: the journal is all there is.
+            self._replay_journal(path)
 
     # ----------------------------------------------------------------- CRUD
     def add(self, rec: LatencyRecord) -> None:
         self._records[rec.key()] = rec
         self._failures.pop(rec.key(), None)  # a success supersedes a failure
+        self._dirty_records.add(rec.key())
+        self._dirty_failures.discard(rec.key())
 
     def extend(self, recs: Iterable[LatencyRecord]) -> None:
         for r in recs:
@@ -141,6 +152,7 @@ class LatencyDB:
     # ------------------------------------------------------------- failures
     def add_failure(self, failure: ProbeFailure) -> None:
         self._failures[failure.key()] = failure
+        self._dirty_failures.add(failure.key())
 
     def failures(self) -> list[ProbeFailure]:
         return list(self._failures.values())
@@ -178,18 +190,86 @@ class LatencyDB:
                 mine = self._records.get(key)
                 if mine is None or rec.measured_at > mine.measured_at:
                     self._records[key] = rec
+                    self._dirty_records.add(key)
             for key, fail in other._failures.items():
                 mine = self._failures.get(key)
                 if mine is None or fail.failed_at > mine.failed_at:
                     self._failures[key] = fail
+                    self._dirty_failures.add(key)
         for key in list(self._failures):
             if key in self._records:
                 del self._failures[key]
+                self._dirty_failures.discard(key)
         return self
 
     # ------------------------------------------------------------------- IO
+    def flush(self, path: str | None = None) -> str:
+        """Append only the dirty (not-yet-persisted) entries to the journal.
+
+        This is the cheap per-probe durability point: an N-probe sweep used
+        to rewrite the whole DB after every probe — O(N²) JSON serialization
+        plus N flock read-merge-write cycles. ``flush`` instead appends each
+        new record/failure once to a ``<path>.journal`` JSONL sidecar
+        (fsync'd, under the same inter-process lock) and nothing when there
+        is nothing new. Crash-resume is preserved: :meth:`load` and the
+        constructor replay the journal on top of the main file. ``save``
+        compacts journal + main file back into one atomic write.
+        """
+        path = path or self.path
+        assert path, "no path for LatencyDB.flush"
+        if not self._dirty_records and not self._dirty_failures:
+            return path
+        lines = []
+        for key in sorted(self._dirty_records):
+            rec = self._records.get(key)
+            if rec is not None:
+                lines.append(json.dumps({"r": dataclasses.asdict(rec)}))
+        for key in sorted(self._dirty_failures):
+            fail = self._failures.get(key)
+            if fail is not None:
+                lines.append(json.dumps({"f": dataclasses.asdict(fail)}))
+        with _flush_lock(path):
+            with open(_journal_path(path), "a") as f:
+                f.write("".join(line + "\n" for line in lines))
+                f.flush()
+                os.fsync(f.fileno())
+        self._dirty_records.clear()
+        self._dirty_failures.clear()
+        return path
+
+    def _replay_journal(self, path: str) -> None:
+        """Apply journal lines in append order; damaged tails are dropped."""
+        jpath = _journal_path(path)
+        try:
+            text = open(jpath).read()
+        except OSError:
+            return
+        replayed_recs, replayed_fails = set(), set()
+        for line in text.splitlines():
+            if not line.strip():
+                continue
+            try:  # a crash mid-append leaves at most one torn final line
+                obj = json.loads(line)
+                if "r" in obj:
+                    rec = LatencyRecord(**obj["r"])
+                    self.add(rec)
+                    replayed_recs.add(rec.key())
+                elif "f" in obj:
+                    fail = ProbeFailure(**obj["f"])
+                    self.add_failure(fail)
+                    replayed_fails.add(fail.key())
+            except Exception:  # noqa: BLE001 - torn/foreign line: skip
+                continue
+        if replayed_recs or replayed_fails:
+            logger.debug("replayed %d journal entries from %s",
+                         len(replayed_recs) + len(replayed_fails), jpath)
+        # Replayed entries live on disk already — they are not dirty.
+        self._dirty_records -= replayed_recs
+        self._dirty_failures -= replayed_fails
+
     def save(self, path: str | None = None, merge_on_disk: bool = True) -> str:
-        """Flush to ``path``: read-merge the on-disk state, then write atomically.
+        """Compact to ``path``: read-merge the on-disk state (main file plus
+        any journal), write atomically, then drop the journal.
 
         Concurrent writers (sharded sessions flushing to one DB) are safe:
         the read-merge-write cycle runs under an inter-process lock, the
@@ -202,7 +282,8 @@ class LatencyDB:
         path = path or self.path
         assert path, "no path for LatencyDB.save"
         with _flush_lock(path):
-            if merge_on_disk and os.path.exists(path) and not self._disk_unchanged(path):
+            on_disk = os.path.exists(path) or os.path.exists(_journal_path(path))
+            if merge_on_disk and on_disk and not self._disk_unchanged(path):
                 try:
                     disk = LatencyDB(path)
                 except Exception:  # noqa: BLE001 - salvage, never clobber, a corrupt file
@@ -212,13 +293,22 @@ class LatencyDB:
                        "records": [dataclasses.asdict(r) for r in self._records.values()],
                        "failures": [dataclasses.asdict(f) for f in self._failures.values()]},
                       path)
+            try:
+                os.unlink(_journal_path(path))
+            except OSError:
+                pass
             self._remember_disk_state(path)
+        self._dirty_records.clear()
+        self._dirty_failures.clear()
         return path
 
     def _disk_unchanged(self, path: str) -> bool:
         """True when ``path`` still holds exactly what we last wrote/read —
-        lets per-probe flushes of long sweeps skip re-parsing their own
-        output. Checked under the flush lock."""
+        lets repeated compactions of long sweeps skip re-parsing their own
+        output. A pending journal always counts as changed. Checked under
+        the flush lock."""
+        if os.path.exists(_journal_path(path)):
+            return False
         try:
             st = os.stat(path)
         except OSError:
@@ -234,11 +324,21 @@ class LatencyDB:
 
     def load(self, path: str) -> None:
         blob = load_json(path)
+        loaded_recs, loaded_fails = set(), set()
         for raw in blob["records"]:
-            self.add(LatencyRecord(**raw))
+            rec = LatencyRecord(**raw)
+            self.add(rec)
+            loaded_recs.add(rec.key())
         for raw in blob.get("failures", ()):  # absent in pre-1.1 DB files
-            self.add_failure(ProbeFailure(**raw))
+            fail = ProbeFailure(**raw)
+            self.add_failure(fail)
+            loaded_fails.add(fail.key())
+        # What came off disk is by definition already persisted.
+        self._dirty_records -= loaded_recs
+        self._dirty_failures -= loaded_fails
         self._remember_disk_state(path)
+        if os.path.exists(_journal_path(path)):
+            self._replay_journal(path)
 
     @classmethod
     def recover(cls, path: str) -> "LatencyDB":
@@ -254,6 +354,7 @@ class LatencyDB:
         db = cls()
         db.path = path
         if not os.path.exists(path):
+            db._replay_journal(path)
             return db
         try:
             db.load(path)
@@ -283,6 +384,7 @@ class LatencyDB:
                 except Exception:  # noqa: BLE001 - e.g. wrong value types
                     pass
             pos = text.find("{", max(end, pos + 1))
+        db._replay_journal(path)  # journal entries survive main-file damage
         logger.warning("recovered %d records + %d failures from corrupt DB %s",
                        len(db), len(db.failures()), path)
         return db

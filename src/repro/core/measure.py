@@ -1,17 +1,31 @@
 """Per-op measurement (Section IV) + deprecation shims for the old suite API.
 
 ``measure_op`` / ``measure_op_full`` extract one instruction's latency with
-the two-length slope method and remain the measurement core. The old suite
-entry points (``run_suite``, ``clock_overhead``) are thin shims over
-:mod:`repro.api` — new code should build a :class:`repro.api.Plan` and run it
-through a :class:`repro.api.Session`, which adds caching, resumability and
-structured failure records.
+the two-length slope method and remain the measurement core. The measurement
+is split in two (docs/performance.md):
+
+* :func:`prepare_op` does everything XLA-bound — builds the chain callables at
+  both lengths and compiles them (through a persistent
+  :class:`~repro.core.compile_cache.CompileCache` when one is given), no
+  device timing;
+* :func:`run_prepared_op` does everything device-bound — the two-length
+  :meth:`Timer.slope` over the prepared callables.
+
+The split is what lets the session's compile-ahead thread lower probe N+1
+while probe N times. ``measure_op_full`` remains the one-call form (prepare
+then run) so serial callers are byte-identical to the pipelined path.
+
+The old suite entry points (``run_suite``, ``clock_overhead``) are thin shims
+over :mod:`repro.api` — new code should build a :class:`repro.api.Plan` and
+run it through a :class:`repro.api.Session`, which adds caching, resumability
+and structured failure records.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import warnings
-from typing import Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 
@@ -27,6 +41,11 @@ from repro.core.timing import Measurement, Timer
 _CHAIN_LENS = {"O0": (2, 10), "O1": (64, 512), "O3": (64, 512)}
 _REPS = {"O0": 5, "O1": 30, "O3": 30}
 
+# Widened-spread retry factor when a slope comes out non-positive: the new
+# upper length is n1 + _RETRY_WIDEN * (n2 - n1), capped at the spec's
+# max_chain (see Timer.slope).
+_RETRY_WIDEN = 4
+
 
 def _needs_x64(spec: OpSpec) -> bool:
     return spec.requires_x64 or spec.dtype in ("int64", "uint64", "float64")
@@ -38,27 +57,117 @@ def _x64_ctx(spec: OpSpec):
     return contextlib.nullcontext()
 
 
+def retry_lens_for(spec: OpSpec, n1: int, n2: int) -> tuple[int, int]:
+    """Capped widened chain spread for the noisy-slope retry.
+
+    Returns the original ``(n1, n2)`` (which disables the retry) when the
+    spec's ``max_chain`` leaves no room to widen.
+    """
+    widened = n1 + _RETRY_WIDEN * (n2 - n1)
+    if spec.max_chain is not None:
+        widened = min(widened, spec.max_chain)
+    return (n1, widened) if widened > n2 else (n1, n2)
+
+
+def compile_chain(spec: OpSpec, n: int, opt_level: str, *args: Any,
+                  cache: Any = None, env: Mapping[str, str] | None = None
+                  ) -> Callable:
+    """One chain callable at length ``n``, compiled through the cache.
+
+    ``O0`` is eager — nothing to compile or cache. ``O1``/``O3`` are
+    AOT-compiled (``jit().lower().compile()``) so the resulting executable is
+    a serializable object the :class:`CompileCache` can persist; without a
+    cache the compile simply isn't stored.
+    """
+    fn = chain_fn(spec, n)
+    if opt_level == "O0":
+        return fn
+    if cache is not None and env is not None:
+        from repro.core.compile_cache import fidelity_key
+
+        key = fidelity_key(env, spec.name, opt_level, spec.dtype,
+                           f"chain{n}" + (".x64" if _needs_x64(spec) else ""))
+        compiled, _, _ = cache.load_or_compile(
+            key, lambda: _aot_compile(fn, opt_level, *args))
+        return compiled
+    # no cache: legacy per-level compilation (O3 stays a lazy jit, compiled
+    # at the first warmup call), so the serial path's behavior is unchanged
+    return compile_at_level(fn, opt_level, *args)
+
+
+def _aot_compile(fn: Callable, opt_level: str, *args: Any) -> Callable:
+    if opt_level == "O1":
+        return compile_at_level(fn, "O1", *args)  # AOT with reduced options
+    return jax.jit(fn).lower(*args).compile()
+
+
+@dataclasses.dataclass
+class PreparedOp:
+    """Everything :func:`run_prepared_op` needs; produced off the timing
+    thread by :func:`prepare_op`."""
+
+    spec: OpSpec
+    opt_level: str
+    lens: tuple[int, int]
+    retry_lens: tuple[int, int]
+    reps: int
+    carry: Any
+    operands: tuple
+    _fns: dict[int, Callable]
+    _cache: Any = None
+    _env: Mapping[str, str] | None = None
+
+    def fn_by_len(self, n: int) -> Callable:
+        """Memoized chain callable; the widened retry length compiles lazily."""
+        if n not in self._fns:
+            with _x64_ctx(self.spec):
+                self._fns[n] = compile_chain(self.spec, n, self.opt_level,
+                                             self.carry, *self.operands,
+                                             cache=self._cache, env=self._env)
+        return self._fns[n]
+
+
+def prepare_op(spec: OpSpec, opt_level: str = "O3", cache: Any = None,
+               env: Mapping[str, str] | None = None) -> PreparedOp:
+    """Compile (or cache-load) the two chain callables for ``spec``; no
+    device timing happens here, so it is safe to run on the compile-ahead
+    thread while another probe times."""
+    n1, n2 = _CHAIN_LENS[opt_level]
+    if spec.max_chain is not None:
+        n1, n2 = min(n1, spec.max_chain // 3), min(n2, spec.max_chain)
+    with _x64_ctx(spec):
+        carry = spec.carry()
+        operands = spec.operand_arrays()
+    prepared = PreparedOp(spec=spec, opt_level=opt_level, lens=(n1, n2),
+                          retry_lens=retry_lens_for(spec, n1, n2),
+                          reps=_REPS[opt_level], carry=carry,
+                          operands=operands, _fns={}, _cache=cache, _env=env)
+    prepared.fn_by_len(n1)
+    prepared.fn_by_len(n2)
+    return prepared
+
+
+def run_prepared_op(prepared: PreparedOp, timer: Timer | None = None
+                    ) -> Measurement:
+    """Time a :class:`PreparedOp`: the device-serial half of the split."""
+    timer = timer or Timer()
+    with _x64_ctx(prepared.spec):
+        return timer.slope(prepared.fn_by_len, *prepared.lens,
+                           prepared.carry, *prepared.operands,
+                           reps=prepared.reps,
+                           retry_lens=prepared.retry_lens)
+
+
 def measure_op_full(spec: OpSpec, opt_level: str = "O3",
                     timer: Timer | None = None) -> Measurement:
     """Per-op latency at the given optimization level, with dispersion.
 
     Returns the full :class:`Measurement` (median + MAD + min) so callers can
     propagate the dispersion into :class:`LatencyRecord.mad_ns` instead of
-    dropping it.
+    dropping it. Equivalent to ``run_prepared_op(prepare_op(...))`` — the
+    serial form of the pipelined split.
     """
-    timer = timer or Timer()
-    n1, n2 = _CHAIN_LENS[opt_level]
-    if spec.max_chain is not None:
-        n1, n2 = min(n1, spec.max_chain // 3), min(n2, spec.max_chain)
-    reps = _REPS[opt_level]
-    with _x64_ctx(spec):
-        carry = spec.carry()
-        operands = spec.operand_arrays()
-
-        def fn_by_len(n: int) -> Callable:
-            return compile_at_level(chain_fn(spec, n), opt_level, carry, *operands)
-
-        return timer.slope(fn_by_len, n1, n2, carry, *operands, reps=reps)
+    return run_prepared_op(prepare_op(spec, opt_level), timer)
 
 
 def measure_op(spec: OpSpec, opt_level: str = "O3", timer: Timer | None = None) -> float:

@@ -101,26 +101,82 @@ def _cold_latency_ns(fn, ring: jax.Array, start: jax.Array, steps: int) -> float
     return (time.perf_counter_ns() - t0) / steps
 
 
+@dataclasses.dataclass
+class PreparedChase:
+    """Compiled host-chase callables (the XLA-bound half of
+    :func:`measure_latency`); built off the timing thread by
+    :func:`prepare_chase`, consumed by :func:`run_prepared_chase`."""
+
+    working_set_bytes: int
+    line_bytes: int
+    steps: tuple[int, int]
+    ring: jax.Array
+    start: jax.Array
+    f1: "jax.stages.Compiled"
+    f2: "jax.stages.Compiled"
+
+
+def _compile_chase(n: int, ring: jax.Array, start: jax.Array, ws: int,
+                   line_bytes: int, cache=None, env=None):
+    """One chase-length callable, AOT through the persistent cache if given.
+
+    Without a cache this stays the legacy lazy ``jax.jit`` (compiled at the
+    first warmup call), so the serial path's behavior is unchanged.
+    """
+    if cache is not None and env is not None:
+        from repro.core.compile_cache import fidelity_key
+
+        key = fidelity_key(env, f"mem.chase.ws{ws}", "O3", "int32",
+                           f"steps{n}.line{line_bytes}")
+        compiled, _, _ = cache.load_or_compile(
+            key, lambda: jax.jit(chase_fn(n)).lower(ring, start).compile())
+        return compiled
+    return jax.jit(chase_fn(n))
+
+
+def prepare_chase(working_set_bytes: int, line_bytes: int = 64,
+                  steps: tuple[int, int] = (2048, 6144),
+                  cache=None, env=None) -> PreparedChase:
+    """Build the ring and compile both chase lengths; no device timing."""
+    ring, _ = build_ring(working_set_bytes, line_bytes)
+    start = jnp.asarray(0, jnp.int32)
+    n1, n2 = steps
+    f1 = _compile_chase(n1, ring, start, working_set_bytes, line_bytes,
+                        cache=cache, env=env)
+    f2 = _compile_chase(n2, ring, start, working_set_bytes, line_bytes,
+                        cache=cache, env=env)
+    return PreparedChase(working_set_bytes=working_set_bytes,
+                         line_bytes=line_bytes, steps=(n1, n2),
+                         ring=ring, start=start, f1=f1, f2=f2)
+
+
+def run_prepared_chase(prepared: PreparedChase, timer: Timer | None = None
+                       ) -> MemPoint:
+    """Time a :class:`PreparedChase`: the device-serial half of the split."""
+    timer = timer or Timer(warmup=2, reps=15)
+    ring, start = prepared.ring, prepared.start
+    n1, n2 = prepared.steps
+    # Cold: first execution after transfer. The AOT-compiled f2 is warmed
+    # shape-only on a zeroed ring, so no compile lands inside the timed pass.
+    cold_ns = _cold_latency_ns(prepared.f2, ring, start, n2)
+    m1 = timer.time_callable(prepared.f1, ring, start)
+    m2 = timer.time_callable(prepared.f2, ring, start)
+    per_load = max((m2.median_ns - m1.median_ns) / (n2 - n1), 0.0)
+    return MemPoint(working_set_bytes=prepared.working_set_bytes,
+                    latency_ns=per_load, cold_latency_ns=cold_ns,
+                    stride_bytes=prepared.line_bytes)
+
+
 def measure_latency(working_set_bytes: int, line_bytes: int = 64,
                     timer: Timer | None = None,
                     steps: tuple[int, int] = (2048, 6144)) -> MemPoint:
-    """Per-load latency for a working set of the given size."""
-    timer = timer or Timer(warmup=2, reps=15)
-    ring, _ = build_ring(working_set_bytes, line_bytes)
-    start = jnp.asarray(0, jnp.int32)
+    """Per-load latency for a working set of the given size.
 
-    n1, n2 = steps
-    f1 = jax.jit(chase_fn(n1))
-    f2 = jax.jit(chase_fn(n2))
-    # Cold: first execution after transfer (jit cache warmed shape-only,
-    # so no compile lands inside the timed pass).
-    cold_ns = _cold_latency_ns(jax.jit(chase_fn(n2)), ring, start, n2)
-
-    m1 = timer.time_callable(f1, ring, start)
-    m2 = timer.time_callable(f2, ring, start)
-    per_load = max((m2.median_ns - m1.median_ns) / (n2 - n1), 0.0)
-    return MemPoint(working_set_bytes=working_set_bytes, latency_ns=per_load,
-                    cold_latency_ns=cold_ns, stride_bytes=line_bytes)
+    Equivalent to ``run_prepared_chase(prepare_chase(...))`` — the serial
+    form of the pipelined split.
+    """
+    return run_prepared_chase(
+        prepare_chase(working_set_bytes, line_bytes, steps), timer)
 
 
 def mempoint_from_record(rec) -> MemPoint:

@@ -29,6 +29,41 @@ import jax
 from repro.utils import block
 
 
+class NoisySlopeError(RuntimeError):
+    """A two-length slope came out non-positive: host noise exceeded the
+    per-op signal at the given chain spread. Raised (after one widened-spread
+    retry) instead of returning a bogus ``<= 0`` latency, so the session
+    records a structured :class:`~repro.core.latency_db.ProbeFailure` rather
+    than silently persisting a row that would later poison
+    ``HloLatencyEstimator`` pricing."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveFidelity:
+    """Adaptive repetition policy: stop repeating once the running MAD/median
+    converges, spend the saved reps on rows that stay noisy.
+
+    A measurement may stop as soon as ``min_reps`` samples are in and
+    ``MAD <= rel_mad * median``; the unspent repetitions are banked on the
+    Timer. A measurement that is still noisy at its nominal rep count may draw
+    banked reps — up to ``(max_extra_factor - 1) * reps`` extra — so the total
+    sample budget of a sweep is conserved but concentrated where the noise is.
+    """
+
+    rel_mad: float = 0.05
+    min_reps: int = 4
+    max_extra_factor: float = 2.0
+
+    def converged(self, samples_ns: Sequence[float]) -> bool:
+        if len(samples_ns) < max(self.min_reps, 2):
+            return False
+        med = statistics.median(samples_ns)
+        if med <= 0:
+            return False
+        mad = statistics.median([abs(s - med) for s in samples_ns])
+        return mad <= self.rel_mad * med
+
+
 @dataclasses.dataclass(frozen=True)
 class Measurement:
     """Robust summary of repeated wall-clock timings (nanoseconds)."""
@@ -70,15 +105,49 @@ class Timer:
     device: pin every timed/warmed execution (and the compilations they
         trigger) to this jax device via ``jax.default_device``. ``None``
         keeps jax's process default — the pre-multi-device behavior.
+        Re-pinning an already-used timer invalidates the null calibrations
+        taken while it was unpinned (see the ``device`` property).
+    adaptive: an :class:`AdaptiveFidelity` policy, or None (default) for
+        fixed repetition counts. When set, ``time_callable`` may stop early
+        on converged measurements and spend the banked reps on noisy ones.
     """
 
     def __init__(self, warmup: int = 3, reps: int = 30, clock_hz: float | None = None,
-                 device: Any | None = None):
+                 device: Any | None = None,
+                 adaptive: "AdaptiveFidelity | None" = None):
         self.warmup = int(warmup)
         self.reps = int(reps)
         self.clock_hz = clock_hz
-        self.device = device
         self._null_cache: dict[Any, Measurement] = {}
+        self._device: Any | None = None
+        self.device = device
+        self.adaptive = adaptive
+        self._rep_bank = 0
+
+    @property
+    def device(self) -> Any | None:
+        return self._device
+
+    @device.setter
+    def device(self, dev: Any | None) -> None:
+        """Re-pinning invalidates unpinned-era null calibrations.
+
+        ``_null_cache`` entries are keyed by the ``device`` attribute at
+        calibration time. Entries keyed under a *concrete* device were
+        measured on that device and stay valid. Entries keyed under ``None``
+        were measured on "whatever the default device was then" — once the
+        pin changes (a session adopting a shared timer, or an unpin), that
+        provenance is no longer trustworthy, and serving them to the newly
+        pinned/unpinned timer would hand a stale null measurement to every
+        sandwich. They are dropped on any pin change.
+        """
+        old = self._device
+        self._device = dev
+        if old is not dev and old != dev:
+            stale = [k for k in self._null_cache
+                     if isinstance(k, tuple) and len(k) == 2 and k[1] is None]
+            for k in stale:
+                del self._null_cache[k]
 
     def device_ctx(self):
         """``jax.default_device`` scope for the pinned device (no-op if unpinned)."""
@@ -89,17 +158,34 @@ class Timer:
     # ------------------------------------------------------------------ raw
     def time_callable(self, fn: Callable[..., Any], *args: Any,
                       warmup: int | None = None, reps: int | None = None) -> Measurement:
-        """Median wall time of ``fn(*args)`` with device completion."""
+        """Median wall time of ``fn(*args)`` with device completion.
+
+        With an :class:`AdaptiveFidelity` policy set, ``reps`` is the nominal
+        budget: the loop stops as soon as the running MAD/median converges
+        (banking the unspent reps on this timer), and a measurement still
+        noisy at the nominal count may draw banked reps to keep sampling.
+        ``Measurement.n`` always reports the repetitions actually taken.
+        """
         warmup = self.warmup if warmup is None else warmup
         reps = self.reps if reps is None else reps
+        adaptive = self.adaptive if (self.adaptive is not None
+                                     and reps > self.adaptive.min_reps) else None
+        max_total = reps
+        if adaptive is not None:
+            max_total = reps + min(
+                int(reps * (adaptive.max_extra_factor - 1.0)), self._rep_bank)
         with self.device_ctx():
             for _ in range(warmup):
                 block(fn(*args))
-            samples = []
-            for _ in range(reps):
+            samples: list[float] = []
+            while len(samples) < max_total:
                 t0 = time.perf_counter_ns()
                 block(fn(*args))
                 samples.append(time.perf_counter_ns() - t0)
+                if adaptive is not None and adaptive.converged(samples):
+                    break
+        if adaptive is not None:
+            self._rep_bank += reps - len(samples)  # bank savings / repay draws
         return _summarize(samples)
 
     # ----------------------------------------------------------- calibration
@@ -128,14 +214,46 @@ class Timer:
     def slope(self, fn_by_len: Callable[[int], Callable[..., Any]],
               n1: int, n2: int, *args: Any,
               warmup: int | None = None, reps: int | None = None,
-              use_min: bool = True) -> Measurement:
+              use_min: bool = True,
+              retry_lens: tuple[int, int] | None = None) -> Measurement:
         """Per-op latency from two chain lengths (overhead cancels exactly).
 
         With ``use_min`` (default) the difference of per-length *minimum*
         times is used: the noise-floor estimator, far more robust on a shared
         host than medians (wall-clock noise is strictly additive).
+
+        A non-positive estimate means host noise exceeded the signal at this
+        chain spread (``min(T(n2)) <= min(T(n1))`` happens on loaded hosts
+        when ``n2 - n1`` is small). Instead of returning the bogus value —
+        which used to be silently persisted and later poisoned estimator
+        pricing — the measurement is retried **once** with a widened spread
+        (``retry_lens``; defaults to ``(n1, n2 + 3*(n2 - n1))``), and if the
+        retry is still non-positive a :class:`NoisySlopeError` is raised so
+        the caller records a structured failure. Callers whose chains have a
+        length cap pass an explicitly capped ``retry_lens``; passing the
+        original ``(n1, n2)`` disables the retry (raise immediately).
         """
         assert n2 > n1 >= 0
+        diff = self._slope_once(fn_by_len, n1, n2, *args,
+                                warmup=warmup, reps=reps, use_min=use_min)
+        if diff.median_ns > 0:
+            return diff
+        widened = retry_lens if retry_lens is not None else (n1, n2 + 3 * (n2 - n1))
+        if tuple(widened) != (n1, n2) and widened[1] > widened[0] >= 0:
+            retry = self._slope_once(fn_by_len, widened[0], widened[1], *args,
+                                     warmup=warmup, reps=reps, use_min=use_min)
+            if retry.median_ns > 0:
+                return retry
+        raise NoisySlopeError(
+            f"non-positive slope ({diff.median_ns:.3f} ns/op) at chain lens "
+            f"({n1}, {n2}): host noise exceeded the per-op signal"
+            + ("" if tuple(widened) == (n1, n2) else
+               f"; widened retry at {tuple(widened)} was also non-positive"))
+
+    def _slope_once(self, fn_by_len: Callable[[int], Callable[..., Any]],
+                    n1: int, n2: int, *args: Any,
+                    warmup: int | None = None, reps: int | None = None,
+                    use_min: bool = True) -> Measurement:
         t1 = self.time_callable(fn_by_len(n1), *args, warmup=warmup, reps=reps)
         t2 = self.time_callable(fn_by_len(n2), *args, warmup=warmup, reps=reps)
         diff = (t2 - t1).scaled(1.0 / (n2 - n1))

@@ -25,11 +25,14 @@ mapping to the paper.
 """
 from repro.inkernel.factory import (build_chain, default_tile, supported,
                                     supported_specs, tiles)
-from repro.inkernel.measure import (CHASE_LENS, INKERNEL_LENS,
-                                    measure_chase_full, measure_inkernel_full)
+from repro.inkernel.measure import (CHASE_LENS, INKERNEL_LENS, PreparedKernel,
+                                    measure_chase_full, measure_inkernel_full,
+                                    prepare_chase, prepare_inkernel,
+                                    run_prepared_chase, run_prepared_inkernel)
 
 __all__ = [
-    "CHASE_LENS", "INKERNEL_LENS", "build_chain", "default_tile",
-    "measure_chase_full", "measure_inkernel_full", "supported",
-    "supported_specs", "tiles",
+    "CHASE_LENS", "INKERNEL_LENS", "PreparedKernel", "build_chain",
+    "default_tile", "measure_chase_full", "measure_inkernel_full",
+    "prepare_chase", "prepare_inkernel", "run_prepared_chase",
+    "run_prepared_inkernel", "supported", "supported_specs", "tiles",
 ]

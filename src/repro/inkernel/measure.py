@@ -9,6 +9,11 @@ are produced by one algebra and stay directly comparable.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Callable, Mapping
+
+import jax
+
 from repro.core.chains import OpSpec
 from repro.core.timing import Measurement, Timer
 from repro.inkernel.factory import build_chain, tiles
@@ -23,6 +28,85 @@ INKERNEL_LENS = (8, 64)
 # path, short enough that the serial dependent-load chain stays cheap to run
 # at both lengths even when every step streams from HBM.
 CHASE_LENS = (64, 192)
+
+
+def _cached_aot(fn: Callable, args: tuple, op: str, fidelity: str,
+                cache: Any, env: Mapping[str, str] | None,
+                dtype: str = "int32") -> Callable:
+    """AOT-compile ``fn`` for ``args`` through the compile cache.
+
+    Without a cache the raw callable is returned unchanged (the kernel
+    factories jit internally), preserving the legacy serial behavior.
+    """
+    if cache is not None and env is not None:
+        from repro.core.compile_cache import fidelity_key
+
+        key = fidelity_key(env, op, "O3", dtype, fidelity)
+        compiled, _, _ = cache.load_or_compile(
+            key, lambda: jax.jit(fn).lower(*args).compile())
+        return compiled
+    return fn
+
+
+@dataclasses.dataclass
+class PreparedKernel:
+    """Compiled two-length kernel callables plus their slope parameters.
+
+    The XLA-bound half of an in-kernel probe — built off the timing thread
+    (Session's compile-ahead worker), consumed on the main thread by
+    :func:`run_prepared_inkernel` / :func:`run_prepared_chase`.
+    """
+
+    lens: tuple[int, int]
+    retry_lens: tuple[int, int] | None
+    args: tuple
+    reps: int | None
+    memory_space: str = ""        # chase only
+    _fns: dict[int, Callable] = dataclasses.field(default_factory=dict)
+    _build: Callable[[int], Callable] | None = None
+
+    def fn_by_len(self, n: int) -> Callable:
+        """Memoized kernel; the widened retry length compiles lazily."""
+        if n not in self._fns:
+            self._fns[n] = self._build(n)
+        return self._fns[n]
+
+
+def prepare_chase(working_set_bytes: int, line_bytes: int = 64,
+                  lens: tuple[int, int] = CHASE_LENS,
+                  interpret: bool | None = None,
+                  memory_space: str | None = None,
+                  reps: int | None = None,
+                  cache: Any = None, env: Mapping[str, str] | None = None
+                  ) -> PreparedKernel:
+    """Build the ring and compile both chase-step kernels; no timing."""
+    from repro.core.membench import build_ring
+    from repro.kernels.chase import chase, select_memory_space
+
+    ring, start = build_ring(working_set_bytes, line_bytes)
+    space = (memory_space if memory_space is not None
+             else select_memory_space(ring.size * 4))
+
+    def build(n: int) -> Callable:
+        fn = lambda r, s: chase(r, s, steps=n, interpret=interpret,  # noqa: E731
+                                memory_space=space)
+        return _cached_aot(fn, (ring, start), f"inkernel.mem.{working_set_bytes}",
+                           f"steps{n}.{space}.line{line_bytes}", cache, env)
+
+    prepared = PreparedKernel(lens=lens, retry_lens=None, args=(ring, start),
+                              reps=reps, memory_space=space, _build=build)
+    prepared.fn_by_len(lens[0])
+    prepared.fn_by_len(lens[1])
+    return prepared
+
+
+def run_prepared_chase(prepared: PreparedKernel, timer: Timer | None = None
+                       ) -> tuple[Measurement, str]:
+    """Time a prepared chase: ``(measurement, memory_space)``."""
+    timer = timer or Timer()
+    m = timer.slope(prepared.fn_by_len, *prepared.lens, *prepared.args,
+                    reps=prepared.reps, retry_lens=prepared.retry_lens)
+    return m, prepared.memory_space
 
 
 def measure_chase_full(working_set_bytes: int, line_bytes: int = 64,
@@ -40,22 +124,50 @@ def measure_chase_full(working_set_bytes: int, line_bytes: int = 64,
     memory_space)`` where the space is the residency actually used —
     ``"vmem"`` (BlockSpec-resident, Table IV analog) or ``"any"``
     (HBM-streaming, Fig. 6 analog) — selected by ring footprint unless
-    forced.
+    forced. Equivalent to ``run_prepared_chase(prepare_chase(...))``.
     """
-    from repro.core.membench import build_ring
-    from repro.kernels.chase import chase, select_memory_space
+    return run_prepared_chase(
+        prepare_chase(working_set_bytes, line_bytes, lens,
+                      interpret=interpret, memory_space=memory_space,
+                      reps=reps),
+        timer)
 
+
+def prepare_inkernel(spec: OpSpec, lens: tuple[int, int] = INKERNEL_LENS,
+                     shape: tuple[int, int] | None = None,
+                     interpret: bool | None = None,
+                     reps: int | None = None,
+                     cache: Any = None, env: Mapping[str, str] | None = None
+                     ) -> PreparedKernel:
+    """Compile both chain-length kernels for ``spec``; no timing."""
+    from repro.core.measure import retry_lens_for
+
+    n1, n2 = lens
+    if spec.max_chain is not None:
+        n1, n2 = min(n1, max(spec.max_chain // 3, 1)), min(n2, spec.max_chain)
+    carry, operands = tiles(spec, shape)
+
+    def build(n: int) -> Callable:
+        fn = build_chain(spec, n, interpret=interpret)
+        return _cached_aot(fn, (carry,) + operands, f"inkernel.{spec.name}",
+                           f"chain{n}.tile{'x'.join(map(str, carry.shape))}",
+                           cache, env, dtype=spec.dtype)
+
+    prepared = PreparedKernel(lens=(n1, n2),
+                              retry_lens=retry_lens_for(spec, n1, n2),
+                              args=(carry,) + tuple(operands), reps=reps,
+                              _build=build)
+    prepared.fn_by_len(n1)
+    prepared.fn_by_len(n2)
+    return prepared
+
+
+def run_prepared_inkernel(prepared: PreparedKernel,
+                          timer: Timer | None = None) -> Measurement:
+    """Time a prepared in-kernel chain: the device-serial half."""
     timer = timer or Timer()
-    ring, start = build_ring(working_set_bytes, line_bytes)
-    space = (memory_space if memory_space is not None
-             else select_memory_space(ring.size * 4))
-
-    def fn_by_len(n: int):
-        return lambda r, s: chase(r, s, steps=n, interpret=interpret,
-                                  memory_space=space)
-
-    m = timer.slope(fn_by_len, *lens, ring, start, reps=reps)
-    return m, space
+    return timer.slope(prepared.fn_by_len, *prepared.lens, *prepared.args,
+                       reps=prepared.reps, retry_lens=prepared.retry_lens)
 
 
 def measure_inkernel_full(spec: OpSpec, lens: tuple[int, int] = INKERNEL_LENS,
@@ -63,14 +175,11 @@ def measure_inkernel_full(spec: OpSpec, lens: tuple[int, int] = INKERNEL_LENS,
                           timer: Timer | None = None,
                           interpret: bool | None = None,
                           reps: int | None = None) -> Measurement:
-    """Per-op in-kernel latency for ``spec`` with dispersion (median + MAD)."""
-    timer = timer or Timer()
-    n1, n2 = lens
-    if spec.max_chain is not None:
-        n1, n2 = min(n1, max(spec.max_chain // 3, 1)), min(n2, spec.max_chain)
-    carry, operands = tiles(spec, shape)
+    """Per-op in-kernel latency for ``spec`` with dispersion (median + MAD).
 
-    def fn_by_len(n: int):
-        return build_chain(spec, n, interpret=interpret)
-
-    return timer.slope(fn_by_len, n1, n2, carry, *operands, reps=reps)
+    Equivalent to ``run_prepared_inkernel(prepare_inkernel(...))`` — the
+    serial form of the pipelined split.
+    """
+    return run_prepared_inkernel(
+        prepare_inkernel(spec, lens, shape, interpret=interpret, reps=reps),
+        timer)

@@ -167,6 +167,9 @@ def test_failure_does_not_abort_plan():
 
 # ---------------------------------------------------------------------- MAD
 def test_instruction_probe_propagates_mad(monkeypatch):
+    # disable the prepare split so the pipelined path falls back to run(),
+    # which is where measure_op_full (the seam under test) is consulted
+    monkeypatch.setattr(measure, "prepare_op", lambda *a, **k: None)
     monkeypatch.setattr(measure, "measure_op_full",
                         lambda spec, lv, timer: Measurement(100.0, 7.5, 90.0, 12))
     spec = next(o for o in chains.default_registry() if o.name == "fma.float32")

@@ -129,6 +129,9 @@ def test_guard_netting_uses_inkernel_baseline(monkeypatch, tmp_path):
         ns = 100.0 if spec.name == "add" else 400.0
         return Measurement(ns, 0.0, ns, 2)
 
+    # disable the prepare split so the pipelined path falls back to run(),
+    # which is where measure_inkernel_full (the seam under test) is consulted
+    monkeypatch.setattr(ik, "prepare_inkernel", lambda *a, **k: None)
     monkeypatch.setattr(ik, "measure_inkernel_full", fake_measure)
     monkeypatch.setattr(KCP, "_baselines", weakref.WeakKeyDictionary())
 

@@ -1,5 +1,6 @@
 """LatencyDB: persistence, queries, report generation (property-based)."""
 import dataclasses
+import os
 
 import pytest
 from hypothesis import given, settings, strategies as st
@@ -333,3 +334,96 @@ def test_version_diff_table():
                              n_samples=10))
     md = db.diff_markdown("9.0", "10.0")
     assert "div.s.runtime" in md and "-50.0%" in md
+
+
+# ------------------------------------------------------ journal delta flush
+def test_flush_appends_delta_journal_only(tmp_path):
+    """flush is the per-probe durability point: one JSONL append per new
+    entry, never a whole-file rewrite, and a no-op when nothing is dirty."""
+    path = str(tmp_path / "db.json")
+    journal = path + ".journal"
+    db = LatencyDB(path)
+    db.add(_rec("add"))
+    db.flush()
+    assert not os.path.exists(path)          # no whole-file write
+    assert len(open(journal).readlines()) == 1
+
+    db.flush()                               # nothing dirty: nothing appended
+    assert len(open(journal).readlines()) == 1
+
+    db.add(_rec("mul"))
+    db.add_failure(_fail("boom"))
+    db.flush()
+    assert len(open(journal).readlines()) == 3  # delta only, not a rewrite
+
+    # a fresh DB replays the journal even though the main file never existed
+    again = LatencyDB(path)
+    assert {r.op for r in again.records()} == {"add", "mul"}
+    assert [f.op for f in again.failures()] == ["boom"]
+
+
+def test_journal_replays_on_top_of_main_file(tmp_path):
+    path = str(tmp_path / "db.json")
+    base = LatencyDB(path)
+    base.add(_rec("add", ns=1.0))
+    base.save()
+
+    cont = LatencyDB(path)                   # resumed sweep
+    cont.add(_rec("mul", ns=2.0))
+    cont.flush()                             # journal append only
+
+    merged = LatencyDB(path)
+    assert {r.op for r in merged.records()} == {"add", "mul"}
+
+
+def test_save_compacts_journal_and_disk_state(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = LatencyDB(path)
+    db.add(_rec("add"))
+    db.flush()
+    assert not db._disk_unchanged(path)      # pending journal counts as changed
+    db.save()
+    assert not os.path.exists(path + ".journal")
+    assert db._disk_unchanged(path)          # compacted state is remembered
+    assert len(LatencyDB(path)) == 1
+
+    # a new journal from another writer invalidates the remembered state
+    other = LatencyDB(path)
+    other.add(_rec("mul"))
+    other.flush()
+    assert not db._disk_unchanged(path)
+    db.save()                                # compaction merges the journal
+    assert {r.op for r in LatencyDB(path).records()} == {"add", "mul"}
+
+
+def test_torn_journal_tail_is_skipped(tmp_path):
+    """A crash mid-append leaves at most one torn final line; replay takes
+    every complete entry and drops the tail instead of refusing to load."""
+    path = str(tmp_path / "db.json")
+    db = LatencyDB(path)
+    db.add(_rec("add"))
+    db.add(_rec("mul"))
+    db.flush()
+    with open(path + ".journal", "a") as f:
+        f.write('{"r": {"op": "sqrt", "cate')  # torn mid-append
+
+    replayed = LatencyDB(path)
+    assert {r.op for r in replayed.records()} == {"add", "mul"}
+    # journal entries are already durable: a flush must not re-append them
+    replayed.flush()
+    assert sum(1 for line in open(path + ".journal") if line.strip()) == 3
+
+
+def test_flushed_entries_not_dirty_after_reload(tmp_path):
+    """Round-trip dirtiness: flush clears it, load/replay never re-marks it,
+    so a resumed session's first flush appends nothing."""
+    path = str(tmp_path / "db.json")
+    db = LatencyDB(path)
+    db.add(_rec("add"))
+    db.flush()
+    db.save()
+
+    resumed = LatencyDB(path)
+    assert not resumed._dirty_records and not resumed._dirty_failures
+    resumed.flush()
+    assert not os.path.exists(path + ".journal")

@@ -1,0 +1,261 @@
+"""Compile-ahead pipeline, persistent compile cache, journal-delta flush.
+
+The load-bearing invariant: pipelining and caching change *when compiles
+happen*, never *what gets measured*. Records from a pipelined run must be
+value-identical to a serial run of the same plan — including failure
+records — and a resumed sweep with a warm compile cache must compile zero
+XLA modules.
+"""
+import os
+import threading
+
+import pytest
+
+from repro.api import Plan, Probe, Session
+from repro.core import compile_cache as cc
+from repro.core.compile_cache import CompileCache, fidelity_key
+from repro.core.latency_db import LatencyDB
+from repro.core.timing import Measurement, Timer
+
+
+class SplitProbe(Probe):
+    """Scripted probe with a prepare/run_prepared split: deterministic
+    Measurement per op, optional scripted failures, thread-name log."""
+
+    category = "test"
+
+    def __init__(self, op, value, prepare_error=None, run_error=None, log=None):
+        self.op = op
+        self.opt_level = "O3"
+        self.dtype = "float32"
+        self.value = value
+        self.prepare_error = prepare_error
+        self.run_error = run_error
+        self.log = log if log is not None else []
+
+    def prepare(self, ctx):
+        self.log.append(("prepare", self.op, threading.current_thread().name))
+        if self.prepare_error is not None:
+            raise self.prepare_error
+        return ("prepared", self.op)
+
+    def run_prepared(self, ctx, prepared):
+        if prepared is None:
+            return self.run(ctx)
+        self.log.append(("run", self.op, threading.current_thread().name))
+        if self.run_error is not None:
+            raise self.run_error
+        return self._record(ctx, Measurement(self.value, self.value / 8,
+                                             self.value, 5))
+
+    def run(self, ctx):
+        self.log.append(("run", self.op, threading.current_thread().name))
+        if self.run_error is not None:
+            raise self.run_error
+        return self._record(ctx, Measurement(self.value, self.value / 8,
+                                             self.value, 5))
+
+
+def _timer():
+    # fixed clock_hz: the cycles field must not depend on calibration noise
+    return Timer(warmup=0, reps=2, clock_hz=1e9)
+
+
+def _scripted_plan():
+    return Plan((SplitProbe("alpha", 12.0),
+                 SplitProbe("bad-prep", 1.0,
+                            prepare_error=ValueError("no lowering")),
+                 SplitProbe("beta", 34.5),
+                 SplitProbe("bad-run", 1.0,
+                            run_error=RuntimeError("timed out")),
+                 SplitProbe("gamma", 56.25)))
+
+
+# ----------------------------------------------------------- invariance
+def test_pipelined_records_identical_to_serial():
+    serial = Session(timer=_timer()).run(_scripted_plan(), pipeline=False)
+    piped = Session(timer=_timer()).run(_scripted_plan(), pipeline=True)
+
+    assert [r.status for r in serial.results] == [r.status for r in piped.results]
+    assert [r.status for r in piped.results] == \
+        ["measured", "failed", "measured", "failed", "measured"]
+    for rs, rp in zip(serial.results, piped.results):
+        if rs.record is not None:
+            for field in ("op", "latency_ns", "mad_ns", "net_latency_ns",
+                          "cycles", "n_samples", "guard"):
+                assert getattr(rs.record, field) == getattr(rp.record, field), field
+        else:
+            for field in ("op", "error_type", "message"):
+                assert getattr(rs.failure, field) == getattr(rp.failure, field), field
+
+
+def test_pipeline_compiles_on_worker_thread_times_on_main():
+    log = []
+    plan = Plan(tuple(SplitProbe(f"p{i}", 10.0 * (i + 1), log=log)
+                      for i in range(3)))
+    Session(timer=_timer()).run(plan)  # pipelined default
+    prep = {t for kind, _, t in log if kind == "prepare"}
+    runs = {t for kind, _, t in log if kind == "run"}
+    assert prep and all(t.startswith("repro-compile") for t in prep)
+    assert runs == {threading.current_thread().name}
+
+    log.clear()
+    Session(timer=_timer()).run(plan, pipeline=False)
+    assert {t for _, _, t in log} == {threading.current_thread().name}
+
+
+def test_pipeline_falls_back_to_run_for_plain_probes():
+    """Third-party probes that only implement run() work pipelined."""
+    runs = {}
+
+    class PlainProbe(Probe):
+        category = "test"
+
+        def __init__(self, op):
+            self.op, self.opt_level, self.dtype = op, "O3", "float32"
+
+        def run(self, ctx):
+            runs[self.op] = runs.get(self.op, 0) + 1
+            return self._record(ctx, Measurement(7.0, 0.5, 6.5, 3))
+
+    result = Session(timer=_timer()).run(
+        Plan((PlainProbe("a"), PlainProbe("b"))), pipeline=True)
+    assert len(result.measured) == 2
+    assert runs == {"a": 1, "b": 1}
+
+
+# -------------------------------------------------------- compile cache
+def _require_serializer():
+    if cc._serializer() is None:
+        pytest.skip("jax.experimental.serialize_executable unavailable")
+
+
+def test_compile_cache_round_trip_and_counters(tmp_path):
+    _require_serializer()
+    import jax
+    import jax.numpy as jnp
+
+    cache = CompileCache(str(tmp_path / "xc"))
+    key = ("cpu", "cpu", "x", "add", "O3", "float32", "chain4")
+    x = jnp.arange(4, dtype=jnp.float32)
+
+    def build():
+        return jax.jit(lambda v: v + 1).lower(x).compile()
+
+    c1, extra, hit = cache.load_or_compile(key, build, extra=lambda c: "hlo")
+    assert not hit and cache.stats.misses == 1 and cache.stats.stores == 1
+    assert len(cache) == 1
+
+    # second lookup: deserialized executable, stored extra rides along
+    c2, extra2, hit2 = cache.load_or_compile(
+        key, lambda: pytest.fail("must not recompile"))
+    assert hit2 and extra2 == "hlo" and cache.stats.hits == 1
+    assert jnp.allclose(c2(x), x + 1)
+
+
+def test_compile_cache_eviction_and_corrupt_entries(tmp_path):
+    _require_serializer()
+    import jax
+    import jax.numpy as jnp
+
+    cache = CompileCache(str(tmp_path / "xc"), max_entries=1)
+    x = jnp.asarray(1.0, jnp.float32)
+    for i in range(2):
+        cache.store(("k", str(i)),
+                    jax.jit(lambda v: v * (i + 1)).lower(x).compile())
+    assert len(cache) == 1 and cache.stats.evictions == 1
+
+    # a torn/foreign entry is a miss plus an error counter, never a crash
+    bad_key = ("k", "corrupt")
+    with open(cache.entry_path(bad_key), "wb") as f:
+        f.write(b"not a pickle")
+    assert cache.load(bad_key) is None
+    assert cache.stats.errors == 1
+
+
+def test_fidelity_key_layout():
+    env = {"device_kind": "TPU v9", "backend": "tpu", "jax_version": "9.9"}
+    key = fidelity_key(env, "add", "O3", "int32", "chain24")
+    assert key == ("TPU v9", "tpu", "9.9", "add", "O3", "int32", "chain24")
+
+
+def test_cache_stats_are_per_run_deltas(tmp_path):
+    """summary() reports THIS run's compile work, not cache lifetime totals
+    — the warm-run '0 compiled' check must hold in-process too."""
+    _require_serializer()
+    from repro.api.probes import ClockOverheadProbe
+
+    session = Session(db=str(tmp_path / "db.json"), timer=_timer(),
+                      compile_cache=str(tmp_path / "xc"))
+    plan = Plan((ClockOverheadProbe("O3"),))
+    r1 = session.run(plan)
+    assert r1.cache_stats.misses == 1 and r1.cache_stats.hits == 0
+    assert "1 compiled" in r1.summary()
+    r2 = session.run(plan, force=True)
+    assert r2.cache_stats.misses == 0 and r2.cache_stats.hits == 1
+    assert "compile cache: 1 hits, 0 compiled" in r2.summary()
+
+
+def test_resume_after_interrupt_with_warm_compile_cache(tmp_path):
+    """Interrupted sweep + re-run with the same cache dir: completed probes
+    are DB hits via the journal, remaining probes' executables deserialize,
+    and zero XLA modules compile."""
+    _require_serializer()
+    from repro.api.probes import ClockOverheadProbe
+
+    cache = str(tmp_path / "xc")
+    a, c = ClockOverheadProbe("O3"), ClockOverheadProbe("O1")
+
+    # a prior completed sweep filled the executable cache
+    r0 = Session(db=str(tmp_path / "db0.json"), timer=_timer(),
+                 compile_cache=cache).run(Plan((a, c)))
+    assert r0.cache_stats.misses == 2
+
+    # fresh DB, same cache: interrupt lands after A, C never starts
+    db = tmp_path / "db.json"
+    boom = SplitProbe("boom", 1.0, run_error=KeyboardInterrupt())
+    with pytest.raises(KeyboardInterrupt):
+        Session(db=str(db), timer=_timer(), compile_cache=cache).run(
+            Plan((a, boom, c)), pipeline=False)
+    assert os.path.exists(str(db) + ".journal")  # A is durable, uncompacted
+
+    # resume: A cached from the journal, boom (fixed) + C measure, 0 compiles
+    r2 = Session(db=str(db), timer=_timer(), compile_cache=cache).run(
+        Plan((a, SplitProbe("boom", 1.0), c)))
+    assert [r.status for r in r2.results] == ["cached", "measured", "measured"]
+    assert r2.cache_stats.misses == 0 and r2.cache_stats.hits == 1
+    assert "0 compiled" in r2.summary()
+    assert not os.path.exists(str(db) + ".journal")  # compacted on save
+
+
+# ----------------------------------------------------- adaptive fidelity
+def test_adaptive_reps_eff_lands_in_notes():
+    adaptive = Session(timer=_timer(), adaptive=True).run(
+        Plan((SplitProbe("alpha", 5.0),)))
+    assert "reps_eff=5" in adaptive.measured[0].record.notes
+    plain = Session(timer=_timer()).run(Plan((SplitProbe("alpha", 5.0),)))
+    assert "reps_eff" not in (plain.measured[0].record.notes or "")
+
+
+# ------------------------------------------------------ delta-only flush
+def test_run_issues_exactly_one_whole_file_write(tmp_path, monkeypatch):
+    """Per-probe durability is journal appends; dump_json (the whole-file
+    O(N) serialization) runs once per run — the final compaction — not once
+    per probe. The old behavior was N whole-file rewrites for N probes."""
+    from repro.core import latency_db as ldb
+
+    calls = []
+    real = ldb.dump_json
+
+    def counting(obj, path):
+        calls.append(path)
+        return real(obj, path)
+
+    monkeypatch.setattr(ldb, "dump_json", counting)
+    db = tmp_path / "db.json"
+    plan = Plan(tuple(SplitProbe(f"op{i}", float(i + 1)) for i in range(10)))
+    result = Session(db=str(db), timer=_timer()).run(plan)
+    assert len(result.measured) == 10
+    assert calls == [str(db)]
+    assert not os.path.exists(str(db) + ".journal")
+    assert len(LatencyDB(str(db))) == 10

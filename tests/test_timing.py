@@ -4,7 +4,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import chains, measure
-from repro.core.timing import Measurement, Timer, _summarize
+from repro.core.timing import (AdaptiveFidelity, Measurement, NoisySlopeError,
+                               Timer, _summarize)
 
 
 def test_summarize_median_mad():
@@ -105,3 +106,127 @@ def test_slope_exact_on_synthetic_linear_cost(monkeypatch):
     assert est.min_ns == pytest.approx(SLOPE)
     assert est.mad_ns == 0.0
     assert est.n == 4
+
+
+# -------------------------------------------------- noisy-slope detection
+def _virtual_clock(monkeypatch):
+    import repro.core.timing as timing
+
+    now = [0]
+    monkeypatch.setattr(timing.time, "perf_counter_ns", lambda: now[0])
+    return now
+
+
+def test_slope_raises_noisy_after_widened_retry(monkeypatch):
+    """A clock with zero n-dependence (pure overhead) must never produce a
+    latency row: the old behavior silently persisted slope <= 0."""
+    now = _virtual_clock(monkeypatch)
+
+    def fn_by_len(n):  # cost independent of chain length
+        return lambda: now.__setitem__(0, now[0] + 50_000)
+
+    with pytest.raises(NoisySlopeError, match="widened retry"):
+        Timer(warmup=0, reps=3).slope(fn_by_len, 8, 64)
+
+
+def test_slope_retry_disabled_when_lens_capped(monkeypatch):
+    now = _virtual_clock(monkeypatch)
+
+    def fn_by_len(n):
+        return lambda: now.__setitem__(0, now[0] + 50_000)
+
+    with pytest.raises(NoisySlopeError) as ei:
+        # retry_lens == original lens: the caller's max_chain left no room
+        Timer(warmup=0, reps=3).slope(fn_by_len, 8, 64, retry_lens=(8, 64))
+    assert "widened retry" not in str(ei.value)
+
+
+def test_slope_retry_recovers_at_widened_spread(monkeypatch):
+    """Noise floor hides the signal at (8, 64); the single widened retry at
+    (8, 232) resolves it — scripted via a step-cost virtual clock."""
+    now = _virtual_clock(monkeypatch)
+
+    def fn_by_len(n):
+        cost = 50_000 if n < 100 else 1000 * n
+        return lambda: now.__setitem__(0, now[0] + cost)
+
+    est = Timer(warmup=0, reps=3).slope(fn_by_len, 8, 64)
+    assert est.median_ns == pytest.approx((1000 * 232 - 50_000) / (232 - 8))
+
+
+def test_retry_lens_for_caps_at_max_chain():
+    import dataclasses
+
+    spec = next(o for o in chains.default_registry() if o.name == "add")
+    wide = dataclasses.replace(spec, max_chain=None)
+    assert measure.retry_lens_for(wide, 8, 64) == (8, 232)
+    capped = dataclasses.replace(spec, max_chain=100)
+    assert measure.retry_lens_for(capped, 8, 64) == (8, 100)
+    # no room to widen at all: returns the original pair (retry disabled)
+    tight = dataclasses.replace(spec, max_chain=64)
+    assert measure.retry_lens_for(tight, 8, 64) == (8, 64)
+
+
+# ----------------------------------------------------- adaptive fidelity
+def test_adaptive_convergence_rule():
+    af = AdaptiveFidelity(rel_mad=0.05, min_reps=4)
+    assert not af.converged([100.0] * 3)          # below min_reps
+    assert af.converged([100.0] * 4)              # MAD 0 <= 5% of median
+    assert not af.converged([100.0, 200.0, 50.0, 400.0])
+    assert not af.converged([0.0] * 8)            # zero median never converges
+
+
+def test_adaptive_banks_then_spends_reps(monkeypatch):
+    now = _virtual_clock(monkeypatch)
+    t = Timer(warmup=0, reps=10, adaptive=AdaptiveFidelity(min_reps=4))
+
+    # quiet: constant cost converges at min_reps, 6 reps banked
+    quiet = t.time_callable(lambda: now.__setitem__(0, now[0] + 1000))
+    assert quiet.n == 4 and t._rep_bank == 6
+
+    # noisy: steadily drifting cost keeps MAD/median ~0.5, never converges
+    state = [0]
+
+    def noisy():
+        state[0] += 1
+        now[0] += 1000 * state[0]
+
+    loud = t.time_callable(noisy)
+    assert loud.n == 16  # nominal 10 + all 6 banked
+    assert t._rep_bank == 0
+
+
+def test_adaptive_off_keeps_fixed_reps(monkeypatch):
+    now = _virtual_clock(monkeypatch)
+    t = Timer(warmup=0, reps=10)
+    m = t.time_callable(lambda: now.__setitem__(0, now[0] + 1000))
+    assert m.n == 10
+
+
+# ------------------------------------------- null-cache device invalidation
+def test_null_cache_invalidated_on_pin_change():
+    import jax
+
+    dev = jax.devices()[0]
+    builds = []
+
+    def make_null():
+        builds.append(1)
+        return lambda: None
+
+    t = Timer(warmup=0, reps=1)
+    t.calibrate_null(make_null, key="k")
+    t.calibrate_null(make_null, key="k")
+    assert len(builds) == 1  # unpinned calibration cached
+
+    t.device = dev  # pin: the unpinned-era entry is now untrustworthy
+    t.calibrate_null(make_null, key="k")
+    assert len(builds) == 2  # re-measured, keyed under the concrete device
+
+    t.device = None  # unpin: device-keyed entry stays valid
+    t.calibrate_null(make_null, key="k")
+    assert len(builds) == 3  # but the unpinned slot must re-measure
+
+    t.device = dev  # re-pin same device: concrete-keyed calibration survives
+    t.calibrate_null(make_null, key="k")
+    assert len(builds) == 3
