@@ -1,0 +1,66 @@
+"""CI gate: every auditable record of a LatencyDB must audit clean.
+
+Runs the static chain audit (docs/audit.md) over a measured DB — reusing
+the measurement run's compile cache so no XLA module is recompiled — and
+fails on any ``transformed`` verdict. ``opaque``/``unaudited`` rows are
+reported but only fail under ``--forbid-unaudited``.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_audit --db /tmp/db.json \
+        --compile-cache /tmp/xc
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Sequence
+
+from repro import audit
+from repro.core.compile_cache import CompileCache
+from repro.core.latency_db import LatencyDB
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--db", required=True, help="LatencyDB JSON path")
+    ap.add_argument("--compile-cache", default=None,
+                    help="compile cache dir from the measuring run "
+                         "(audits become pure text analysis)")
+    ap.add_argument("--forbid-unaudited", action="store_true",
+                    help="also fail on opaque/unaudited verdicts")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.db):
+        print(f"error: no DB at {args.db} — run characterize first",
+              file=sys.stderr)
+        return 2
+    db = LatencyDB(args.db)
+    cache = CompileCache(args.compile_cache) if args.compile_cache else None
+    verdicts = audit.audit_db(db, cache=cache)
+    db.save()
+
+    counts: dict[str, int] = {}
+    for v in verdicts:
+        counts[v.status] = counts.get(v.status, 0) + 1
+    summary = ", ".join(f"{k}={counts[k]}" for k in sorted(counts))
+    print(f"audited {len(verdicts)} record(s): {summary or 'none'}")
+
+    failed = [v for v in verdicts if v.failed]
+    soft = [v for v in verdicts if v.status in ("opaque", "unaudited")]
+    for v in failed:
+        print(f"VIOLATION: {v.op}@{v.opt_level}: {v.note()} ({v.detail})",
+              file=sys.stderr)
+    if args.forbid_unaudited:
+        for v in soft:
+            print(f"VIOLATION: {v.op}@{v.opt_level}: {v.note()}",
+                  file=sys.stderr)
+    bad = failed + (soft if args.forbid_unaudited else [])
+    if not bad:
+        print("all auditable records clean")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

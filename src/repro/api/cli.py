@@ -87,7 +87,52 @@ def build_parser() -> argparse.ArgumentParser:
                     help="disable the compile-ahead pipeline (probe N+1's "
                          "compile no longer overlaps probe N's timing); "
                          "measured values are identical either way")
+    ch.add_argument("--audit", action="store_true",
+                    help="statically verify each probe's compiled artifact "
+                         "as it is prepared (chain count, guard accounting, "
+                         "dependent path) and attach the verdict to the "
+                         "record notes (docs/audit.md)")
     ch.set_defaults(func=cmd_characterize)
+
+    au = sub.add_parser(
+        "audit",
+        help="statically verify a LatencyDB's measurement artifacts "
+             "(chain counts, guard accounting, opcode mapping)")
+    au.add_argument("--db", default="/tmp/latency_db.json",
+                    help="LatencyDB JSON path to audit; verdicts are "
+                         "persisted into record notes")
+    au.add_argument("--plan", choices=PLAN_NAMES, default=None,
+                    help="restrict the audit to records the named plan "
+                         "would produce (default: every record)")
+    au.add_argument("--strict", action="store_true",
+                    help="exit 1 on any transformed verdict or lint finding "
+                         "(default: report and exit 0)")
+    au.add_argument("--recheck", action="store_true",
+                    help="re-derive verdicts even for records already "
+                         "carrying an audit= note")
+    au.add_argument("--lint", action="store_true",
+                    help="also run the device-free static lints "
+                         "(table mapping + guard identity)")
+    au.add_argument("--lowering", action="store_true",
+                    help="with --lint: also compile one short chain per "
+                         "registry spec and check target-opcode presence")
+    au.add_argument("--zoo", action="store_true",
+                    help="with --lint: also compile the model zoo and check "
+                         "every HLO opcode is priced/structural/allowlisted")
+    au.add_argument("--archs", default=None,
+                    help="comma-separated arch filter for --zoo "
+                         "(default: the full registry)")
+    au.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="compile cache used by the characterize run: the "
+                         "audit peeks its optimized-HLO sidecars instead of "
+                         "re-invoking XLA")
+    au.add_argument("--attribution", default=None, metavar="PATH",
+                    help="write the per-op O0->O1->O3 transform attribution "
+                         "table (markdown) to PATH ('-' for stdout)")
+    au.add_argument("--attribution-ops", default="quick",
+                    help="'quick' (QUICK_OPS), 'all' (full registry), or a "
+                         "comma-separated op list for --attribution")
+    au.set_defaults(func=cmd_audit)
 
     ss = sub.add_parser(
         "serve-slo",
@@ -163,7 +208,8 @@ def cmd_characterize(args: argparse.Namespace) -> int:
                           timer=Timer(warmup=args.warmup, reps=args.reps),
                           compile_cache=args.compile_cache,
                           adaptive=args.adaptive,
-                          pipeline=not args.serial)
+                          pipeline=not args.serial,
+                          audit=args.audit)
     except Exception as e:  # unreadable/corrupt DB file: report, don't clobber
         print(f"error: could not load DB {args.db}: {type(e).__name__}: {e} "
               "(pass --recover to salvage complete records)", file=sys.stderr)
@@ -199,6 +245,122 @@ def cmd_characterize(args: argparse.Namespace) -> int:
             print("\n== serving predicted vs measured (LatencyDB x perfmodel) ==")
             print(serving)
     return 1 if result.failed else 0
+
+
+def cmd_audit(args: argparse.Namespace) -> int:
+    """Static verification: lints and/or per-record artifact audits.
+
+    Exit codes: 0 clean (or advisory-only without ``--strict``), 1 integrity
+    violations under ``--strict``, 2 usage/IO errors.
+    """
+    import os
+
+    failed = 0
+
+    if args.lint:
+        from repro.audit import run_lints
+
+        archs = ([a.strip() for a in args.archs.split(",")]
+                 if args.archs else None)
+        findings = run_lints(lowering=args.lowering, zoo=args.zoo,
+                             archs=archs)
+        if findings:
+            print(f"{len(findings)} lint finding(s):")
+            for f in findings:
+                print(f"  [{f.lint}] {f.subject}: {f.message}")
+            failed += len(findings)
+        else:
+            scope = "mapping+guards"
+            if args.lowering:
+                scope += "+lowering"
+            if args.zoo:
+                scope += "+zoo"
+            print(f"lints clean ({scope})")
+
+    did_db = False
+    if args.db and os.path.exists(args.db):
+        from repro.audit import audit_db
+        from repro.core.compile_cache import CompileCache
+        from repro.core.latency_db import LatencyDB
+
+        try:
+            db = LatencyDB(args.db)
+        except Exception as e:  # noqa: BLE001 - unreadable DB is a usage error
+            print(f"error: could not load DB {args.db}: "
+                  f"{type(e).__name__}: {e}", file=sys.stderr)
+            return 2
+        cache = CompileCache(args.compile_cache) if args.compile_cache else None
+        wanted = None
+        if args.plan:
+            plan = named_plan(args.plan)
+            wanted = {(p.op, p.opt_level) for p in plan}
+        verdicts = []
+        skipped = 0
+        if wanted is not None:
+            # audit in place but only the plan's rows: filter via a view DB
+            sub = LatencyDB()
+            for rec in db.records():
+                if (rec.op, rec.opt_level) in wanted:
+                    sub.add(rec)
+                else:
+                    skipped += 1
+            verdicts = audit_db(sub, cache=cache, recheck=args.recheck)
+            from repro.utils import parse_kv_notes
+
+            for rec in sub.records():
+                kv = parse_kv_notes(rec.notes)
+                db.annotate(rec.key(), audit=kv.get("audit"),
+                            audit_transform=kv.get("audit_transform"))
+        else:
+            verdicts = audit_db(db, cache=cache, recheck=args.recheck)
+        db.save()
+        did_db = True
+        by_status: dict[str, int] = {}
+        for v in verdicts:
+            by_status[v.status] = by_status.get(v.status, 0) + 1
+        print(f"audited {len(verdicts)} record(s)"
+              + (f" ({skipped} outside plan '{args.plan}')" if skipped else "")
+              + ": " + ", ".join(f"{k}={v}" for k, v in
+                                 sorted(by_status.items())))
+        bad = [v for v in verdicts if v.failed]
+        for v in bad:
+            print(f"  TRANSFORMED {v.op}@{v.opt_level}: {v.cause}"
+                  + (f" — {v.detail}" if v.detail else ""))
+        for v in verdicts:
+            if v.status in ("opaque", "unaudited"):
+                print(f"  {v.status.upper()} {v.op}@{v.opt_level}: {v.cause}")
+        failed += len(bad)
+    elif args.db and not args.lint and not args.attribution:
+        print(f"error: DB {args.db} does not exist (nothing to audit; "
+              "pass --lint for device-free checks)", file=sys.stderr)
+        return 2
+
+    if args.attribution:
+        from repro.audit import write_attribution
+
+        if args.attribution_ops == "all":
+            ops = None
+        elif args.attribution_ops == "quick":
+            from repro.api.plan import QUICK_OPS
+
+            ops = QUICK_OPS
+        else:
+            ops = [o.strip() for o in args.attribution_ops.split(",")]
+        db_for_attr = None
+        if did_db:
+            from repro.core.latency_db import LatencyDB
+
+            db_for_attr = LatencyDB(args.db)
+        if args.attribution == "-":
+            n = write_attribution(sys.stdout, ops, db=db_for_attr)
+        else:
+            with open(args.attribution, "w") as f:
+                n = write_attribution(f, ops, db=db_for_attr)
+        print(f"attribution table: {n} op(s) -> {args.attribution}")
+
+    if failed and args.strict:
+        return 1
+    return 0
 
 
 def cmd_serve_slo(args: argparse.Namespace) -> int:

@@ -146,11 +146,19 @@ class Probe:
             base = baseline if baseline is not None else ctx.baseline_ns(self.opt_level)
         else:
             base = 0.0
+        net = ns - guard * base
+        if net < 0.0:
+            # The guard subtraction went negative: the clamp below would
+            # otherwise persist indistinguishably from a genuinely ~0 latency,
+            # so flag the row for the auditor (repro.audit surfaces clamped=1
+            # rows — a negative net usually means the declared guard count is
+            # wrong or the baseline came from a different methodology).
+            notes = (notes + " " if notes else "") + "clamped=1"
         return LatencyRecord(
             op=self.op, category=self.category, dtype=self.dtype,
             opt_level=self.opt_level, latency_ns=ns, mad_ns=m.mad_ns,
             cycles=ns * ctx.clock_hz / 1e9, guard=guard,
-            net_latency_ns=max(ns - guard * base, 0.0), n_samples=m.n,
+            net_latency_ns=max(net, 0.0), n_samples=m.n,
             measured_at=timestamp(), notes=notes, **ctx.env)
 
     def __repr__(self) -> str:

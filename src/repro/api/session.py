@@ -156,13 +156,20 @@ class Session:
         ``False`` restores strictly serial prepare-then-run execution; the
         measured values are identical either way (only compilation is
         overlapped, never timing).
+    audit: statically verify each probe's compiled artifact as it is
+        prepared (``repro.audit``: chain count, guard accounting, dependent
+        path) and attach the verdict to the record's notes
+        (``audit=ok`` / ``audit=transformed:<cause>`` / ...). Runs on the
+        compile thread, never the timing thread. Off by default; a failed
+        verdict only flags the record — ``python -m repro audit --strict``
+        turns flags into a failing exit.
     """
 
     def __init__(self, db: LatencyDB | str | None = None,
                  timer: Timer | None = None, force: bool = False,
                  device=None, compile_cache: CompileCache | str | None = None,
                  adaptive: AdaptiveFidelity | bool | None = None,
-                 pipeline: bool = True):
+                 pipeline: bool = True, audit: bool = False):
         if isinstance(device, int):
             device = jax.devices()[device]
         self.device = device
@@ -188,6 +195,7 @@ class Session:
         if adaptive is not None:
             self.timer.adaptive = adaptive
         self.pipeline = pipeline
+        self.audit = audit
         self.force = force
         self.env = current_environment(device)
         self._baseline: dict[tuple, float] = {}
@@ -294,18 +302,40 @@ class Session:
                          db=self.db, stage_ns=stage_ns,
                          cache_stats=cache_stats)
 
+    def _audit_for(self, probe: Probe):
+        """Static integrity verdict for one probe's artifact (compile-side).
+
+        Runs right after ``prepare`` so the compile cache's optimized-HLO
+        sidecars are warm and the audit never re-invokes XLA for a cached
+        chain. Any auditor error degrades to no verdict — auditing must
+        never turn a measurable probe into a failure.
+        """
+        if not self.audit:
+            return None
+        try:
+            from repro.audit import audit_target
+
+            return audit_target(probe.op, probe.opt_level,
+                                cache=self.compile_cache, env=self.env)
+        except Exception as e:  # noqa: BLE001 - advisory only
+            logger.warning("audit of %s@%s errored: %s", probe.op,
+                           probe.opt_level, e)
+            return None
+
     def _run_serial(self, pending, ctx, results, stage_ns) -> None:
         """prepare + run_prepared inline, one probe at a time."""
         for i, probe in pending:
             t0 = time.perf_counter_ns()
-            prepared, exc = None, None
+            prepared, exc, verdict = None, None, None
             try:
                 with self._device_ctx():
                     prepared = _prepare_probe(probe, ctx)
+                    verdict = self._audit_for(probe)
             except Exception as e:  # noqa: BLE001 - structured failure below
                 exc = e
             stage_ns["compile"] += time.perf_counter_ns() - t0
-            self._finish_probe(i, probe, ctx, prepared, exc, results, stage_ns)
+            self._finish_probe(i, probe, ctx, prepared, exc, results, stage_ns,
+                               verdict=verdict)
 
     def _run_pipelined(self, pending, ctx, results, stage_ns) -> None:
         """Compile-ahead: the worker prepares probe N+1 while N times.
@@ -320,9 +350,10 @@ class Session:
             try:
                 with self._device_ctx():
                     prepared = _prepare_probe(probe, ctx)
-                return prepared, None, time.perf_counter_ns() - t0
+                    verdict = self._audit_for(probe)
+                return prepared, None, verdict, time.perf_counter_ns() - t0
             except Exception as e:  # noqa: BLE001 - structured failure later
-                return None, e, time.perf_counter_ns() - t0
+                return None, e, None, time.perf_counter_ns() - t0
 
         pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="repro-compile")
@@ -335,15 +366,15 @@ class Session:
                     # the worker moves straight on to probe N+1 while the
                     # main thread times probe N below
                     fut = pool.submit(_prepare, pending[j + 1][1])
-                prepared, exc, compile_ns = cur.result()
+                prepared, exc, verdict, compile_ns = cur.result()
                 stage_ns["compile"] += compile_ns
                 self._finish_probe(i, probe, ctx, prepared, exc, results,
-                                   stage_ns)
+                                   stage_ns, verdict=verdict)
         finally:
             pool.shutdown(wait=False, cancel_futures=True)
 
     def _finish_probe(self, i, probe, ctx, prepared, exc, results,
-                      stage_ns) -> None:
+                      stage_ns, verdict=None) -> None:
         """Time one prepared probe on the main thread and record the outcome."""
         if exc is None:
             t0 = time.perf_counter_ns()
@@ -353,6 +384,13 @@ class Session:
             except Exception as e:  # noqa: BLE001 - recorded as failure
                 exc = e
             else:
+                if verdict is not None:
+                    note = verdict.note()
+                    rec = dataclasses.replace(
+                        rec, notes=f"{rec.notes} {note}".strip())
+                    if verdict.failed:
+                        logger.warning("audit: %s@%s %s (%s)", probe.op,
+                                       probe.opt_level, note, verdict.detail)
                 self.db.add(rec)
                 results[i] = ProbeResult(probe, "measured", record=rec)
                 logger.info("measured %-28s %8.1fns (±%.1f)",

@@ -1,0 +1,93 @@
+"""Static integrity auditing of characterization artifacts.
+
+The measurement pipeline *times* compiled chains; this package *inspects*
+them, closing the loop on the method's two unstated assumptions:
+
+1. a timed chain of length ``n`` really contains ``n`` dependent target ops
+   (``Timer.slope``'s denominator) — :mod:`repro.audit.chain_check`;
+2. the declared ``guard`` count matches the ops actually in the chain
+   (``net_latency_ns``'s subtraction) — same module, plus the static lints
+   in :mod:`repro.audit.lint`.
+
+When a count is wrong, :mod:`repro.audit.transforms` names the XLA pass
+family responsible (folded, strength-reduced, CSE'd, hoisted, ...) — the
+paper's Table III taxonomy — and generates ``results/opt_attribution.md``.
+
+Entry points: ``python -m repro audit`` (CLI), ``Session(audit=True)``
+(verdicts attached to records as they are measured), or :func:`audit_db`
+(verify an existing DB in place). Verdicts persist in record notes as
+``audit=ok`` / ``audit=transformed:<cause>`` / ``audit=opaque:<reason>`` /
+``audit=unaudited:<reason>`` and round-trip through
+:func:`repro.utils.parse_kv_notes`. See docs/audit.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+from repro.audit.chain_check import (ChainVerdict, audit_chase,
+                                     audit_clock_overhead, audit_kernel,
+                                     audit_spec, audit_target, expected_step,
+                                     path_counts)
+from repro.audit.lint import LintFinding, run_lints
+from repro.audit.transforms import classify, write_attribution
+
+__all__ = [
+    "ChainVerdict", "LintFinding", "audit_chase", "audit_clock_overhead",
+    "audit_db", "audit_kernel", "audit_record", "audit_spec", "audit_target",
+    "classify", "expected_step", "path_counts", "run_lints",
+    "write_attribution",
+]
+
+
+def audit_record(rec, *, cache: Any = None,
+                 env: Mapping[str, str] | None = None) -> ChainVerdict:
+    """Audit one LatencyRecord's artifact. Records measured under a different
+    environment fingerprint than the current process cannot be re-derived
+    here and come back ``unaudited:environment-mismatch``."""
+    if env is not None and (rec.device_kind, rec.backend, rec.jax_version) != (
+            env.get("device_kind"), env.get("backend"),
+            env.get("jax_version")):
+        return ChainVerdict(
+            rec.op, rec.opt_level, "unaudited", cause="environment-mismatch",
+            detail=f"record from {rec.device_kind}/{rec.jax_version}, "
+                   f"auditing on {env.get('device_kind')}/"
+                   f"{env.get('jax_version')}")
+    return audit_target(rec.op, rec.opt_level, cache=cache, env=env)
+
+
+def audit_db(db, *, cache: Any = None, env: Mapping[str, str] | None = None,
+             recheck: bool = False, annotate: bool = True
+             ) -> list[ChainVerdict]:
+    """Audit every record in ``db``; returns verdicts in record order.
+
+    Verdicts are persisted into each record's notes (``annotate=False`` for
+    a dry run); existing verdicts are kept unless ``recheck``. Environment-
+    mismatched records are reported but never annotated — their artifacts
+    are not reconstructible in this process and a previously attached
+    verdict from the measuring environment stays authoritative.
+    """
+    from repro.audit.chain_check import _verdict_from_note
+    from repro.core.latency_db import current_environment
+
+    if env is None:
+        env = current_environment()
+    verdicts = []
+    for rec in db.records():
+        existing = _verdict_from_note(rec.op, rec.opt_level, rec.notes)
+        mismatch = (rec.device_kind, rec.backend, rec.jax_version) != (
+            env["device_kind"], env["backend"], env["jax_version"])
+        if mismatch and existing is not None:
+            verdicts.append(existing)
+            continue
+        if existing is not None and not recheck:
+            verdicts.append(existing)
+            continue
+        v = audit_record(rec, cache=cache, env=env)
+        verdicts.append(v)
+        if annotate and not mismatch:
+            kv = {"audit": v.status if not v.cause or v.status == "ok"
+                  else f"{v.status}:{v.cause}",
+                  "audit_transform": v.cause if (v.status == "ok" and v.cause)
+                  else None}
+            db.annotate(rec.key(), **kv)
+    return verdicts

@@ -1,0 +1,686 @@
+"""Static chain-integrity verification of compiled probe artifacts.
+
+The paper's validity claim — and this repo's — is that a timed chain of
+length ``n`` really executes ``n`` dependent instances of the target
+instruction. The measurement machinery *times* compiled artifacts but this
+module *inspects* them: given a probe's two compiled lens it
+
+1. derives the **expected per-step opcode multiset** from the spec's jaxpr
+   (the semantic program, before XLA optimizes), mapped through
+   :data:`PRIM_TO_HLO` and adjusted by the declared compiler transforms in
+   :data:`EXPECTED_TRANSFORMS` (div-by-pow2 becoming shifts, reciprocal
+   multiplies, loop-invariant CSE, ... — the paper's Table III effects);
+2. checks the **two-lens histogram delta**: the optimized-HLO opcode counts
+   at ``n2`` minus those at ``n1`` must be exactly ``(n2-n1)`` x the expected
+   per-step multiset — the unstated denominator assumption of
+   ``Timer.slope``. ``convert``/``bitcast-convert`` are dtype plumbing
+   (bfloat16 chains upcast on CPU backends) and are only required to scale
+   *linearly* with the length, never matched against the jaxpr;
+3. checks the **guard identity**: the declared guard opcodes
+   (:data:`GUARDS`) must sum to ``spec.guard`` and be contained in the
+   expected multiset — what makes ``net_latency_ns``'s ``guard x baseline``
+   subtraction sound;
+4. walks the **dependent-use chain** from the carry parameter to the root
+   (inlining fusion/call computations) and asserts every expected op sits on
+   that path ``count x n`` times — an op with the right histogram count but
+   off the chain was hoisted or parallelized and is not serialized by the
+   measurement.
+
+Verdicts are :class:`ChainVerdict`\\ s whose :meth:`~ChainVerdict.note`
+serializes into LatencyDB record notes (``audit=ok`` /
+``audit=transformed:<cause>`` / ``audit=opaque:...`` /
+``audit=unaudited:...``). See docs/audit.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Any, Iterable, Mapping
+
+from repro.core import measure
+from repro.core.chains import OpSpec, chain_fn, default_registry
+from repro.core.hlo_analysis import (STRUCTURAL_OPS, Computation,
+                                     dynamic_op_histogram, op_histogram,
+                                     parse_module)
+
+# dtype/bit plumbing, never measured arithmetic: required to be linear in the
+# chain length but never matched against the jaxpr expectation (XLA CPU
+# upcasts bfloat16 chains, inserting converts the jaxpr doesn't have)
+PLUMBING_OPS = frozenset({"convert", "bitcast-convert"})
+
+# jax primitive -> HLO opcode(s) it lowers to. Multi-op values are lowering
+# *expansions* (exp2 becomes exp(x * log 2)), not optimizations.
+PRIM_TO_HLO: dict[str, tuple[str, ...]] = {
+    "add": ("add",), "sub": ("subtract",), "mul": ("multiply",),
+    "div": ("divide",), "rem": ("remainder",), "neg": ("negate",),
+    "abs": ("abs",), "max": ("maximum",), "min": ("minimum",),
+    "and": ("and",), "or": ("or",), "xor": ("xor",), "not": ("not",),
+    "shift_left": ("shift-left",),
+    "shift_right_logical": ("shift-right-logical",),
+    "shift_right_arithmetic": ("shift-right-arithmetic",),
+    "eq": ("compare",), "ne": ("compare",), "lt": ("compare",),
+    "le": ("compare",), "gt": ("compare",), "ge": ("compare",),
+    "select_n": ("select",), "convert_element_type": ("convert",),
+    "bitcast_convert_type": ("bitcast-convert",),
+    "sqrt": ("sqrt",), "rsqrt": ("rsqrt",), "sin": ("sine",),
+    "cos": ("cosine",), "log": ("log",), "exp": ("exponential",),
+    "exp2": ("exponential", "multiply"), "tanh": ("tanh",),
+    "logistic": ("logistic",), "sign": ("sign",),
+    "population_count": ("popcnt",), "clz": ("count-leading-zeros",),
+    "integer_pow": ("multiply",), "square": ("multiply",),
+    "floor": ("floor",), "ceil": ("ceil",),
+    "round": ("round-nearest-even",), "is_finite": ("is-finite",),
+}
+
+# Declared guard opcodes per spec (with multiplicity). Keyed by the spec name
+# with any trailing dtype component stripped (``add.float32`` -> ``add``);
+# specs with ``guard == 0`` never consult this table. The guard identity —
+# sum of multiplicities == ``spec.guard`` and every guard opcode present in
+# the expected per-step multiset — is what licenses the ``guard x baseline``
+# subtraction in ``Probe._record``.
+GUARDS: dict[str, tuple[str, ...]] = {
+    "add": ("xor",), "sub": ("xor",), "mul": ("xor",), "mad": ("xor",),
+    "min": ("add",), "max": ("subtract",), "abs": ("subtract",),
+    "div.s.regular": ("add",), "div.s.irregular": ("add",),
+    "div.s.runtime": ("add",), "div.u.regular": ("add",),
+    "div.u.irregular": ("add",), "div.u.runtime": ("add",),
+    "rem.s": ("add",), "rem.u": ("add",),
+    "and": ("add",), "or": ("add",), "xor": ("add",), "not": ("add",),
+    "cnot": ("add",), "shl": ("or",), "shr": ("or",),
+    "div.regular": ("add",), "div.irregular": ("add",),
+    "div.runtime": ("add",),
+    "add.cc": ("xor",), "sub.cc": ("xor",), "mad.cc": ("xor",),
+    "mul.wide": ("xor",), "mul64hi": ("or", "shift-right-logical"),
+    "rcp": ("add",), "sqrt": ("add",), "rsqrt": ("add",), "sin": ("add",),
+    "lg2": ("add",), "ex2": ("subtract",), "tanh": ("add",),
+    "copysign": ("add",), "sad": ("add",), "popc": ("xor",),
+    "clz": ("add",), "bfe": ("and", "add"), "bfi": ("and", "or"),
+    "mul24": ("and", "and"),
+}
+
+# Compiler transforms the auditor *expects* at O1/O3, with a named cause:
+# (cause, removed per-step opcodes, added per-step opcodes). These encode the
+# paper's Table III effects for XLA — a spec matching its transformed
+# expectation audits ``ok`` with the cause annotated; anything else is a
+# ``transformed:<cause>`` integrity failure.
+EXPECTED_TRANSFORMS: dict[str, tuple[str, dict[str, int], dict[str, int]]] = {
+    # div by constant pow-2: signed needs a round-toward-zero fixup
+    "div.s.regular": ("strength-reduction", {"divide": 1},
+                      {"shift-right-logical": 1, "select": 2, "negate": 2,
+                       "compare": 1}),
+    "div.u.regular": ("strength-reduction", {"divide": 1},
+                      {"shift-right-logical": 1}),
+    # float div by any constant: reciprocal multiply
+    "div.regular": ("strength-reduction", {"divide": 1}, {"multiply": 1}),
+    "div.irregular": ("strength-reduction", {"divide": 1}, {"multiply": 1}),
+    # log2(x) traces as log(x)/log(2); XLA folds 1/log(2) into a multiply
+    "lg2": ("strength-reduction", {"log": 1, "divide": 1}, {"multiply": 1}),
+    # the sign-bit test and one of the two |x| lowerings simplify away
+    "copysign": ("algebraic-simplification",
+                 {"shift-right-arithmetic": 1, "abs": 1}, {}),
+    # the (a & mask) operand-side masks are loop-invariant and CSE'd
+    "bfi": ("loop-invariant-cse", {"and": 1}, {}),
+    "mul24": ("loop-invariant-cse", {"and": 1}, {}),
+}
+
+_DTYPE_TOKENS = frozenset({"float32", "float64", "float16", "bfloat16",
+                           "int32", "int64", "uint32", "uint64"})
+
+
+def base_name(op: str) -> str:
+    """Spec name with trailing dtype components stripped
+    (``div.regular.float32`` -> ``div.regular``)."""
+    parts = op.split(".")
+    while len(parts) > 1 and parts[-1] in _DTYPE_TOKENS:
+        parts.pop()
+    return ".".join(parts)
+
+
+def _lookup(table: Mapping[str, Any], op: str) -> Any:
+    for key in (op, base_name(op)):
+        if key in table:
+            return table[key]
+    return None
+
+
+# --------------------------------------------------------------- jaxpr side
+def _count_eqns(jaxpr, counts: Counter) -> None:
+    for eqn in jaxpr.eqns:
+        sub = [v for k, v in eqn.params.items()
+               if k in ("jaxpr", "call_jaxpr") and v is not None]
+        if sub:
+            for s in sub:
+                _count_eqns(getattr(s, "jaxpr", s), counts)
+        else:
+            counts[eqn.primitive.name] += 1
+
+
+def prim_counts(fn, *args) -> Counter:
+    """Primitive histogram of ``fn``'s jaxpr (recursing through pjit/call)."""
+    import jax
+
+    counts: Counter = Counter()
+    _count_eqns(jax.make_jaxpr(fn)(*args).jaxpr, counts)
+    return counts
+
+
+def step_prim_counts(spec: OpSpec) -> Counter:
+    """One chain step's primitive histogram — the semantic program."""
+    with measure._x64_ctx(spec):
+        return prim_counts(spec.step, spec.carry(), *spec.operand_arrays())
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpectedStep:
+    """Per-step opcode expectation for one spec at one opt level."""
+
+    counts: Counter              # countable HLO opcodes per step (optimized)
+    guards: Counter              # declared guard opcodes (subset of counts)
+    transform: str = ""          # named expected-transform cause, "" if none
+    unknown: tuple[str, ...] = ()  # jaxpr primitives with no HLO mapping
+
+    @property
+    def targets(self) -> Counter:
+        return self.counts - self.guards
+
+
+def expected_step(spec: OpSpec, opt_level: str) -> ExpectedStep:
+    """Derive the expected optimized per-step multiset for ``spec``.
+
+    jaxpr primitives -> :data:`PRIM_TO_HLO` -> :data:`EXPECTED_TRANSFORMS`
+    (O1/O3 only; eager dispatch executes the jaxpr as-is and cannot fold).
+    """
+    counts: Counter = Counter()
+    unknown: list[str] = []
+    for prim, k in step_prim_counts(spec).items():
+        hlo = PRIM_TO_HLO.get(prim)
+        if hlo is None:
+            unknown.append(prim)
+            continue
+        for opcode in hlo:
+            if opcode not in PLUMBING_OPS:
+                counts[opcode] += k
+    transform = ""
+    if opt_level in ("O1", "O3"):
+        override = _lookup(EXPECTED_TRANSFORMS, spec.name)
+        if override is not None:
+            cause, remove, add = override
+            removed = Counter(remove)
+            if removed - counts:
+                # the declared transform doesn't apply to this program shape
+                unknown.append(f"transform:{cause}")
+            else:
+                counts = counts - removed + Counter(add)
+                transform = cause
+    guards = Counter(_lookup(GUARDS, spec.name) or ()) if spec.guard else Counter()
+    return ExpectedStep(counts=counts, guards=guards, transform=transform,
+                        unknown=tuple(unknown))
+
+
+# ----------------------------------------------------------------- HLO side
+def chain_hlo_text(spec: OpSpec, n: int, opt_level: str, *,
+                   cache: Any = None, env: Mapping[str, str] | None = None
+                   ) -> str:
+    """Optimized HLO of one chain compile; cache sidecars are peeked first.
+
+    A measurement run through a :class:`CompileCache` rides the HLO text into
+    the entry's ``extra`` payload (``measure.compile_chain``), so auditing a
+    warm cache never re-invokes XLA.
+    """
+    import jax
+
+    if cache is not None and env is not None:
+        text = cache.peek_extra(measure.chain_cache_key(spec, n, opt_level, env))
+        if text:
+            return text
+    with measure._x64_ctx(spec):
+        fn = chain_fn(spec, n)
+        lowered = jax.jit(fn).lower(spec.carry(), *spec.operand_arrays())
+        if opt_level == "O1":
+            from repro.core.optlevels import _o1_options
+
+            opts = _o1_options()
+            compiled = (lowered.compile(compiler_options=opts) if opts
+                        else lowered.compile())
+        else:
+            compiled = lowered.compile()
+        return compiled.as_text()
+
+
+def hist_counts(hlo_text: str) -> tuple[Counter, Counter]:
+    """Flat ``(countable, plumbing)`` opcode histograms of a module."""
+    countable: Counter = Counter()
+    plumbing: Counter = Counter()
+    for (opcode, _elems), cnt in op_histogram(hlo_text).items():
+        if opcode in PLUMBING_OPS:
+            plumbing[opcode] += cnt
+        elif opcode not in STRUCTURAL_OPS:
+            countable[opcode] += cnt
+    return countable, plumbing
+
+
+# ------------------------------------------------------ dependent-path walk
+_PARAM_IDX_RE = re.compile(r"\s*(\d+)")
+_CALLEE_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+
+
+def _inline_graph(comps: dict[str, Computation]
+                  ) -> tuple[dict[str, tuple[str, list[str]]],
+                             str | None, dict[int, str], bool]:
+    """Flatten fusion/call computations reachable from the entry into one SSA
+    graph: ``(graph, root, entry_params, has_loop)`` where graph maps
+    qualified op name -> (opcode, global operand names) in program order."""
+    entry = comps.get("__entry__")
+    graph: dict[str, tuple[str, list[str]]] = {}
+    entry_params: dict[int, str] = {}
+    has_loop = False
+
+    def emit(comp: Computation, prefix: str,
+             param_names: list[str] | None) -> str | None:
+        nonlocal has_loop
+        rename: dict[str, str] = {}
+        root = last = None
+        for op in comp.ops:
+            if op.opcode == "parameter":
+                m = _PARAM_IDX_RE.match(op.rest)
+                idx = int(m.group(1)) if m else -1
+                if param_names is not None and 0 <= idx < len(param_names):
+                    rename[op.name] = param_names[idx]
+                else:
+                    rename[op.name] = prefix + op.name
+                    if prefix == "":
+                        entry_params[idx] = op.name
+                last = rename[op.name]
+                continue
+            qn = prefix + op.name
+            operands = [rename.get(o, o) for o in op.operands]
+            if op.opcode in ("fusion", "call"):
+                m = _CALLEE_RE.search(op.rest)
+                sub = comps.get(m.group(1)) if m else None
+                if sub is not None:
+                    sub_root = emit(sub, qn + "/", operands)
+                    if sub_root is not None:
+                        rename[op.name] = sub_root
+                        last = sub_root
+                        if op.is_root:
+                            root = sub_root
+                        continue
+            if op.opcode == "while":
+                has_loop = True
+            graph[qn] = (op.opcode, operands)
+            rename[op.name] = qn
+            last = qn
+            if op.is_root:
+                root = qn
+        return root if root is not None else last
+
+    if entry is None:
+        return graph, None, entry_params, has_loop
+    root = emit(entry, "", None)
+    return graph, root, entry_params, has_loop
+
+
+def path_counts(hlo_text: str, source_param: int = 0) -> Counter:
+    """Opcode counts on the dependent path carry-parameter -> root.
+
+    Forward reach from entry parameter ``source_param`` intersected with
+    backward reach from the ROOT op, fusion/call computations inlined. An op
+    is *on the path* when it both consumes the carry (transitively) and
+    feeds the result — exactly the ops ``Timer.slope`` serializes.
+    """
+    graph, root, entry_params, _ = _inline_graph(parse_module(hlo_text))
+    src = entry_params.get(source_param)
+    if root is None or src is None:
+        return Counter()
+    reach = {src}
+    for name, (_opcode, operands) in graph.items():  # SSA order: one pass
+        if any(o in reach for o in operands):
+            reach.add(name)
+    needed = {root}
+    for name in reversed(list(graph)):
+        if name in needed:
+            for o in graph[name][1]:
+                needed.add(o)
+    counts: Counter = Counter()
+    for name in reach & needed:
+        if name in graph:
+            opcode = graph[name][0]
+            if opcode not in STRUCTURAL_OPS and opcode not in PLUMBING_OPS:
+                counts[opcode] += 1
+    return counts
+
+
+def root_is_constant(hlo_text: str) -> bool:
+    """True when the entry ROOT does not depend on any entry parameter —
+    the whole chain folded to a compile-time constant."""
+    graph, root, entry_params, _ = _inline_graph(parse_module(hlo_text))
+    if root is None:
+        return False
+    params = set(entry_params.values())
+    needed = {root}
+    for name in reversed(list(graph)):
+        if name in needed:
+            for o in graph[name][1]:
+                needed.add(o)
+    return not (needed & params)
+
+
+# ------------------------------------------------------------------ verdict
+@dataclasses.dataclass(frozen=True)
+class ChainVerdict:
+    """Outcome of one static integrity check.
+
+    ``status``: ``ok`` (chain count + guard accounting exact), ``transformed``
+    (the compiler broke the chain assumption; ``cause`` names the pass
+    family), ``opaque`` (artifact is not inspectable, e.g. a real-hardware
+    Pallas custom-call), ``unaudited`` (no checker covers this record family
+    or the environment doesn't match).
+    """
+
+    op: str
+    opt_level: str
+    status: str
+    cause: str = ""
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "transformed"
+
+    def note(self) -> str:
+        """The ``audit=...`` token persisted into LatencyDB record notes."""
+        if self.status == "ok":
+            tok = "audit=ok"
+            if self.cause:
+                tok += f" audit_transform={self.cause}"
+            return tok
+        if self.cause:
+            return f"audit={self.status}:{self.cause}"
+        return f"audit={self.status}"
+
+
+def _verdict_from_note(op: str, opt_level: str, notes: str
+                       ) -> ChainVerdict | None:
+    """Parse a persisted ``audit=`` token back into a verdict, or None."""
+    from repro.utils import parse_kv_notes
+
+    kv = parse_kv_notes(notes)
+    tok = kv.get("audit")
+    if not tok:
+        return None
+    status, _, cause = tok.partition(":")
+    if status == "ok":
+        cause = kv.get("audit_transform", "")
+    return ChainVerdict(op=op, opt_level=opt_level, status=status, cause=cause)
+
+
+def _delta(c2: Counter, c1: Counter) -> dict[str, int]:
+    return {k: c2.get(k, 0) - c1.get(k, 0)
+            for k in set(c2) | set(c1)
+            if c2.get(k, 0) != c1.get(k, 0)}
+
+
+def _fmt(counts: Mapping[str, int]) -> str:
+    return " ".join(f"{k}:{v}" for k, v in sorted(counts.items())) or "(none)"
+
+
+# ----------------------------------------------------------- spec auditing
+def audit_spec(spec: OpSpec, opt_level: str, *, cache: Any = None,
+               env: Mapping[str, str] | None = None,
+               lens: tuple[int, int] | None = None) -> ChainVerdict:
+    """Full chain-integrity check of one registry spec at one opt level."""
+    if lens is None:
+        n1, n2 = measure._CHAIN_LENS[opt_level]
+        if spec.max_chain is not None:
+            n1, n2 = min(n1, spec.max_chain // 3), min(n2, spec.max_chain)
+    else:
+        n1, n2 = lens
+    if opt_level == "O0":
+        return _audit_spec_eager(spec, (n1, n2))
+
+    exp = expected_step(spec, opt_level)
+    if exp.unknown:
+        return ChainVerdict(spec.name, opt_level, "unaudited",
+                            cause="unmapped-primitive",
+                            detail=f"no HLO mapping for {exp.unknown}")
+    # guard identity: declared guard count must equal the declared guard
+    # opcodes, and those opcodes must exist in the expected multiset
+    if sum(exp.guards.values()) != spec.guard or (exp.guards - exp.counts):
+        return ChainVerdict(
+            spec.name, opt_level, "transformed", cause="guard-mismatch",
+            detail=f"spec.guard={spec.guard} but declared guard ops "
+                   f"[{_fmt(exp.guards)}] vs expected step [{_fmt(exp.counts)}]")
+
+    texts = {n: chain_hlo_text(spec, n, opt_level, cache=cache, env=env)
+             for n in (n1, n2)}
+    c1, p1 = hist_counts(texts[n1])
+    c2, p2 = hist_counts(texts[n2])
+    if c1.get("custom-call") or c2.get("custom-call"):
+        return ChainVerdict(spec.name, opt_level, "opaque",
+                            cause="custom-call",
+                            detail="artifact contains an opaque custom-call")
+    dn = n2 - n1
+    observed = _delta(c2, c1)
+    expected = {k: v * dn for k, v in exp.counts.items()}
+    if observed != expected:
+        from repro.audit.transforms import classify
+
+        cause = classify(Counter(expected), Counter({k: v for k, v
+                                                     in observed.items()
+                                                     if v > 0}),
+                         hlo_text=texts[n2])
+        return ChainVerdict(
+            spec.name, opt_level, "transformed", cause=cause,
+            detail=f"lens {n1}->{n2}: expected delta [{_fmt(expected)}], "
+                   f"got [{_fmt(observed)}]")
+    # plumbing (convert) must scale linearly: a constant per-step count
+    for opcode in set(p1) | set(p2):
+        d = p2.get(opcode, 0) - p1.get(opcode, 0)
+        if d < 0 or d % dn != 0:
+            return ChainVerdict(
+                spec.name, opt_level, "transformed", cause="plumbing-nonlinear",
+                detail=f"{opcode} delta {d} over {dn} steps is not an "
+                       f"integer per-step count")
+    # dependent-path walk: every expected op must sit ON the carry->root
+    # chain count x n2 times (right histogram but off the path => hoisted)
+    pc = path_counts(texts[n2])
+    want = {k: v * n2 for k, v in exp.counts.items()}
+    if dict(pc) != want:
+        return ChainVerdict(
+            spec.name, opt_level, "transformed", cause="hoisted",
+            detail=f"on-path counts [{_fmt(pc)}] != expected "
+                   f"[{_fmt(want)}] at len {n2}")
+    return ChainVerdict(spec.name, opt_level, "ok", cause=exp.transform)
+
+
+def _audit_spec_eager(spec: OpSpec, lens: tuple[int, int]) -> ChainVerdict:
+    """O0 check: eager dispatch executes the jaxpr as-is, so integrity is
+    verified at the jaxpr level — the chain's primitive delta must be exactly
+    ``(n2-n1)`` x the one-step primitives."""
+    n1, n2 = lens
+    with measure._x64_ctx(spec):
+        args = (spec.carry(), *spec.operand_arrays())
+        c1 = prim_counts(chain_fn(spec, n1), *args)
+        c2 = prim_counts(chain_fn(spec, n2), *args)
+    step = step_prim_counts(spec)
+    dn = n2 - n1
+    observed = _delta(c2, c1)
+    expected = {k: v * dn for k, v in step.items()}
+    if observed != expected:
+        from repro.audit.transforms import classify
+
+        cause = classify(Counter(expected),
+                         Counter({k: v for k, v in observed.items() if v > 0}))
+        return ChainVerdict(
+            spec.name, "O0", "transformed", cause=cause,
+            detail=f"jaxpr delta over lens {n1}->{n2}: expected "
+                   f"[{_fmt(expected)}], got [{_fmt(observed)}]")
+    return ChainVerdict(spec.name, "O0", "ok")
+
+
+# ----------------------------------------------- non-instruction artifacts
+def audit_clock_overhead(opt_level: str) -> ChainVerdict:
+    """The null timed region must contain zero countable ops."""
+    import jax
+    import jax.numpy as jnp
+
+    if opt_level == "O0":
+        c = prim_counts(lambda v: v, jnp.asarray(1.0, jnp.float32))
+        if c:
+            return ChainVerdict("clock_overhead", "O0", "transformed",
+                                cause="non-empty-null-region",
+                                detail=f"jaxpr primitives: {_fmt(c)}")
+        return ChainVerdict("clock_overhead", "O0", "ok")
+    x = jnp.asarray(1.0, jnp.float32)
+    text = jax.jit(lambda v: v).lower(x).compile().as_text()
+    countable, _ = hist_counts(text)
+    if countable:
+        return ChainVerdict("clock_overhead", opt_level, "transformed",
+                            cause="non-empty-null-region",
+                            detail=f"countable ops: {_fmt(countable)}")
+    return ChainVerdict("clock_overhead", opt_level, "ok")
+
+
+# memory-load opcodes a compiled chase may legitimately use per step
+_CHASE_LOAD_OPS = ("dynamic-slice", "gather")
+
+
+def audit_chase(working_set_bytes: int, steps: tuple[int, int],
+                line_bytes: int = 64, *, cache: Any = None,
+                env: Mapping[str, str] | None = None,
+                op: str | None = None) -> ChainVerdict:
+    """Host pointer chase: the trip-weighted delta between the two step
+    counts must contain exactly one dependent load per step."""
+    import jax
+
+    from repro.core import membench
+
+    op = op or f"mem.chase.ws{working_set_bytes}"
+    texts = {}
+    for n in steps:
+        text = None
+        if cache is not None and env is not None:
+            text = cache.peek_extra(
+                membench.chase_cache_key(working_set_bytes, n, line_bytes, env))
+        if not text:
+            ring, _ = membench.build_ring(working_set_bytes, line_bytes)
+            import jax.numpy as jnp
+
+            start = jnp.asarray(0, jnp.int32)
+            text = (jax.jit(membench.chase_fn(n)).lower(ring, start)
+                    .compile().as_text())
+        texts[n] = text
+    s1, s2 = steps
+    d1 = dynamic_op_histogram(texts[s1])
+    d2 = dynamic_op_histogram(texts[s2])
+    loads1 = sum(v for (opc, _e), v in d1.items() if opc in _CHASE_LOAD_OPS)
+    loads2 = sum(v for (opc, _e), v in d2.items() if opc in _CHASE_LOAD_OPS)
+    per_step = (loads2 - loads1) / (s2 - s1)
+    if per_step != 1.0:
+        cause = "hoisted" if per_step < 1.0 else "duplicated-load"
+        return ChainVerdict(
+            op, "O3", "transformed", cause=cause,
+            detail=f"dependent loads/step = {per_step:g} over steps "
+                   f"{s1}->{s2} (expected exactly 1)")
+    return ChainVerdict(op, "O3", "ok")
+
+
+# per-step opcode expectation of the Pallas alu_chain kernel body
+KERNEL_STEP_OPS: dict[str, dict[str, int]] = {
+    "fma": {"multiply": 1, "add": 1},
+    "add": {"add": 1},
+    "mul": {"multiply": 1},
+    "rsqrt": {"rsqrt": 1, "add": 1},
+    "exp": {"exponential": 1, "add": 1, "negate": 1},
+}
+
+
+def audit_kernel(kernel_op: str, lens: tuple[int, int],
+                 shape: tuple[int, int] = (8, 128), *,
+                 op: str | None = None) -> ChainVerdict:
+    """In-kernel (Pallas) ALU chain. In interpret mode (CPU) the kernel
+    inlines into plain HLO and gets the full delta check; a real-hardware
+    lowering is an opaque custom-call and is reported as such rather than
+    silently passed."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import alu_chain
+
+    op = op or f"kernel.alu_chain.{kernel_op}"
+    step = KERNEL_STEP_OPS.get(kernel_op)
+    if step is None:
+        return ChainVerdict(op, "O3", "unaudited", cause="unknown-kernel-op")
+    x = jnp.full(shape, 1.0, jnp.float32)
+    a = jnp.full(shape, 0.5, jnp.float32)
+    counts = {}
+    for n in lens:
+        fn = lambda x, a, n=n: alu_chain(x, a, n=n, op=kernel_op)  # noqa: E731
+        text = jax.jit(fn).lower(x, a).compile().as_text()
+        c, _ = hist_counts(text)
+        if c.get("custom-call"):
+            return ChainVerdict(op, "O3", "opaque", cause="custom-call",
+                                detail="real (non-interpret) Pallas lowering")
+        counts[n] = c
+    n1, n2 = lens
+    dn = n2 - n1
+    observed = _delta(counts[n2], counts[n1])
+    expected = {k: v * dn for k, v in step.items()}
+    if observed != expected:
+        from repro.audit.transforms import classify
+
+        cause = classify(Counter(expected),
+                         Counter({k: v for k, v in observed.items() if v > 0}))
+        return ChainVerdict(
+            op, "O3", "transformed", cause=cause,
+            detail=f"lens {n1}->{n2}: expected delta [{_fmt(expected)}], "
+                   f"got [{_fmt(observed)}]")
+    return ChainVerdict(op, "O3", "ok")
+
+
+# ------------------------------------------------------------ dispatching
+_MEM_RE = re.compile(r"^mem\.chase\.ws(\d+)(?:\.s(\d+)-(\d+))?(?:\.line(\d+))?$")
+_KERNEL_RE = re.compile(
+    r"^kernel\.alu_chain\.([a-z0-9]+)(?:\.l(\d+)-(\d+))?(?:\.t(\d+)x(\d+))?$")
+
+
+def audit_target(op: str, opt_level: str, *, cache: Any = None,
+                 env: Mapping[str, str] | None = None,
+                 registry: Iterable[OpSpec] | None = None) -> ChainVerdict:
+    """Audit whatever artifact the record row ``op@opt_level`` was measured
+    from. Rows no static checker covers come back ``unaudited`` with a
+    reason, never silently ``ok``."""
+    if op == "clock_overhead":
+        return audit_clock_overhead(opt_level)
+    m = _MEM_RE.match(op)
+    if m:
+        ws = int(m.group(1))
+        steps = ((int(m.group(2)), int(m.group(3))) if m.group(2)
+                 else (2048, 6144))
+        line = int(m.group(4)) if m.group(4) else 64
+        return audit_chase(ws, steps, line, cache=cache, env=env, op=op)
+    m = _KERNEL_RE.match(op)
+    if m:
+        lens = ((int(m.group(2)), int(m.group(3))) if m.group(2) else (8, 64))
+        shape = ((int(m.group(4)), int(m.group(5))) if m.group(4)
+                 else (8, 128))
+        return audit_kernel(m.group(1), lens, shape, op=op)
+    if op.startswith(("serving.", "slo.")):
+        return ChainVerdict(op, opt_level, "unaudited", cause="consumer-row",
+                            detail="predicted-vs-measured consumer record; "
+                                   "integrity rides on the rows it prices")
+    if op.startswith("inkernel."):
+        return ChainVerdict(op, opt_level, "unaudited",
+                            cause="pallas-fori-loop",
+                            detail="in-kernel fori_loop chain; covered by "
+                                   "the dispatch-level twin's audit")
+    specs = list(registry) if registry is not None else default_registry()
+    spec = next((s for s in specs if s.name == op), None)
+    if spec is not None:
+        return audit_spec(spec, opt_level, cache=cache, env=env)
+    return ChainVerdict(op, opt_level, "unaudited", cause="unknown-family")

@@ -1,0 +1,243 @@
+"""Device-free static lints over the repo's opcode plumbing.
+
+Three closure properties keep the characterization -> estimator -> serving
+pipeline honest, and all three are checkable without timing anything:
+
+* **table mapping** — every ``HLO_TO_TABLE`` value must resolve to a registry
+  spec (else the estimator prices HLO against a row no probe ever measures);
+* **guard identity** — every registry spec's declared ``guard`` count must
+  match the audit's declared guard *opcodes* and those opcodes must exist in
+  the spec's own per-step multiset (else ``net_latency_ns`` subtracts
+  baselines that are not actually in the chain);
+* **zoo coverage** — every opcode appearing in the model zoo's optimized HLO
+  must be priced (``HLO_TO_TABLE``), structural (``STRUCTURAL_OPS``), or on
+  the explicit :data:`ZOO_ALLOWLIST` (else a new model silently inflates the
+  estimator's default-cost bucket).
+
+``lint_registry_lowering`` additionally compiles one short chain per spec and
+asserts the expected target opcodes actually appear — the cheap
+presence-only cousin of the full :func:`repro.audit.chain_check.audit_spec`.
+Run everything via :func:`run_lints` or ``python -m repro audit --lint``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+# Opcodes the zoo's optimized HLO may contain that are *deliberately* not in
+# HLO_TO_TABLE. Every entry needs a reason — this list is the documented
+# boundary of the estimator's default-cost bucket, kept by the zoo lint.
+ZOO_ALLOWLIST: dict[str, str] = {
+    # special-cased by HloLatencyEstimator's matmul term, never table-priced
+    "dot": "priced by the estimator's dedicated matmul/FLOP term",
+    # data-dependent reshuffles: cost is memory traffic (byte rollup), and
+    # no dispatch-level chain can serialize them into a latency row
+    "gather": "memory-bound data movement; priced by the byte rollup",
+    "scatter": "memory-bound data movement; priced by the byte rollup",
+    "select-and-scatter": "memory-bound data movement; byte rollup",
+    # lane-local ALU ops with no PTX-table analog in the paper's ISA set;
+    # each is ~1 simple-op latency and is dominated by mapped neighbors
+    "select": "predication; folded into the comparison it consumes",
+    "compare": "sets predicates; no standalone PTX table row",
+    "convert": "dtype plumbing; audited as linear, not priced",
+    "bitcast-convert": "dtype plumbing; audited as linear, not priced",
+    "clamp": "min+max macro of two mapped rows",
+    "sign": "compare/select macro",
+    "floor": "rounding mode of a mapped convert-class op",
+    "ceil": "rounding mode of a mapped convert-class op",
+    "round-nearest-even": "rounding mode of a mapped convert-class op",
+    "round-nearest-afz": "rounding mode of a mapped convert-class op",
+    "is-finite": "exponent-field compare; predicate producer",
+    "expm1": "libm composite of mapped ex2/add",
+    "atan2": "libm composite; no PTX table row in the paper",
+    "erf": "libm composite; no PTX table row in the paper",
+    "cbrt": "libm composite; no PTX table row in the paper",
+    # reductions/laid-out loops: trip-weighted by dynamic_op_histogram; the
+    # body ops are counted individually there
+    "reduce": "loop skeleton; body ops are counted individually",
+    "reduce-window": "loop skeleton; body ops are counted individually",
+    "sort": "comparator loop skeleton; body ops counted individually",
+    # RNG: counter-based generator, priced as its component ALU ops
+    "rng-bit-generator": "counter-based RNG; components are mapped ALU ops",
+    "rng": "legacy RNG op; components are mapped ALU ops",
+    # NOTE: custom-call is deliberately NOT allowlisted — it must keep
+    # counting against estimator coverage (see STRUCTURAL_OPS rationale).
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    lint: str       # which lint fired
+    subject: str    # op / spec / arch the finding is about
+    message: str
+
+    def __str__(self) -> str:  # pragma: no cover - display helper
+        return f"[{self.lint}] {self.subject}: {self.message}"
+
+
+def lint_table_mapping() -> list[LintFinding]:
+    """Every ``HLO_TO_TABLE`` value must name a measurable registry spec."""
+    from repro.core.chains import default_registry
+    from repro.core.hlo_analysis import HLO_TO_TABLE, STRUCTURAL_OPS
+
+    spec_names = {s.name for s in default_registry()}
+    findings = []
+    for opcode, table_op in sorted(HLO_TO_TABLE.items()):
+        if table_op not in spec_names:
+            findings.append(LintFinding(
+                "table-mapping", opcode,
+                f"maps to '{table_op}' which is not a registry spec — the "
+                f"estimator would price it with a row no probe measures"))
+        if opcode in STRUCTURAL_OPS:
+            findings.append(LintFinding(
+                "table-mapping", opcode,
+                "is both priced (HLO_TO_TABLE) and structural "
+                "(STRUCTURAL_OPS); the estimator would double-classify it"))
+    return findings
+
+
+def lint_guard_identity() -> list[LintFinding]:
+    """Declared guard counts vs declared guard opcodes vs per-step multiset.
+
+    Pure tracing (``jax.make_jaxpr``) — no XLA compile, no timing.
+    """
+    from repro.audit.chain_check import GUARDS, _lookup, expected_step
+    from repro.core.chains import default_registry
+
+    findings = []
+    for spec in default_registry():
+        try:
+            exp = expected_step(spec, "O3")
+        except Exception as e:  # noqa: BLE001 - a spec that won't trace is a finding
+            findings.append(LintFinding(
+                "guard-identity", spec.name, f"step fn does not trace: {e}"))
+            continue
+        if exp.unknown:
+            findings.append(LintFinding(
+                "guard-identity", spec.name,
+                f"jaxpr primitives with no HLO mapping: {list(exp.unknown)}"))
+            continue
+        if spec.guard == 0:
+            continue
+        if _lookup(GUARDS, spec.name) is None:
+            findings.append(LintFinding(
+                "guard-identity", spec.name,
+                f"spec.guard={spec.guard} but no guard opcodes declared in "
+                f"audit GUARDS"))
+            continue
+        if sum(exp.guards.values()) != spec.guard:
+            findings.append(LintFinding(
+                "guard-identity", spec.name,
+                f"spec.guard={spec.guard} != declared guard opcodes "
+                f"{dict(exp.guards)}"))
+        if exp.guards - exp.counts:
+            findings.append(LintFinding(
+                "guard-identity", spec.name,
+                f"declared guard opcodes {dict(exp.guards)} not contained "
+                f"in the expected per-step multiset {dict(exp.counts)}"))
+    return findings
+
+
+def lint_registry_lowering(opt_levels: tuple[str, ...] = ("O1", "O3"),
+                           chain_len: int = 4) -> list[LintFinding]:
+    """Presence check: each spec's expected target opcodes appear in one
+    short compiled chain at each opt level (CPU compile, no timing)."""
+    from repro.audit.chain_check import (chain_hlo_text, expected_step,
+                                         hist_counts)
+    from repro.core.chains import default_registry
+
+    findings = []
+    for spec in default_registry():
+        for level in opt_levels:
+            try:
+                exp = expected_step(spec, level)
+                if exp.unknown:
+                    continue  # already reported by lint_guard_identity
+                n = chain_len
+                if spec.max_chain is not None:
+                    n = min(n, spec.max_chain)
+                counts, _ = hist_counts(chain_hlo_text(spec, n, level))
+            except Exception as e:  # noqa: BLE001 - non-lowering spec is a finding
+                findings.append(LintFinding(
+                    "registry-lowering", f"{spec.name}@{level}",
+                    f"chain does not compile: {e}"))
+                continue
+            missing = {opc: k for opc, k in exp.targets.items()
+                       if counts.get(opc, 0) < k}
+            if missing:
+                findings.append(LintFinding(
+                    "registry-lowering", f"{spec.name}@{level}",
+                    f"expected target opcodes {missing} absent from the "
+                    f"compiled chain (got {dict(counts)})"))
+    return findings
+
+
+def _zoo_hlo(arch: str) -> str:
+    """Optimized train-step HLO for one zoo arch (the smoke-test recipe)."""
+    import jax
+
+    from repro.configs.registry import get
+    from repro.models import encdec, transformer
+    from repro.models.config import Runtime
+
+    rt = Runtime(moe_groups=2, mamba_chunk=8, mlstm_chunk=8, xent_chunk=16,
+                 remat=False)
+    key = jax.random.PRNGKey(0)
+    b, s = 2, 32
+    cfg = get(arch).smoke
+    import jax.numpy as jnp
+
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.n_encoder_layers:
+        batch["frames"] = jax.random.normal(key, (b, s // 4, cfg.d_model))
+        params = encdec.init_encdec(key, cfg)
+        fn = lambda p, bt: encdec.train_loss(p, bt, cfg, rt)  # noqa: E731
+    else:
+        if cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s)[None, None], (3, b, s)).astype(jnp.int32)
+        params = transformer.init_lm(key, cfg)
+        fn = lambda p, bt: transformer.train_loss(p, bt, cfg, rt)  # noqa: E731
+    return jax.jit(fn).lower(params, batch).compile().as_text()
+
+
+def lint_zoo(archs: Iterable[str] | None = None) -> list[LintFinding]:
+    """Every opcode in the model zoo's optimized HLO must be priced,
+    structural, or explicitly allowlisted. Compiles each arch's train step
+    on the host backend (slow: seconds per arch) but times nothing."""
+    from repro.configs.registry import all_arch_ids
+    from repro.core.hlo_analysis import (HLO_TO_TABLE, STRUCTURAL_OPS,
+                                         op_histogram)
+
+    findings = []
+    for arch in (archs if archs is not None else all_arch_ids()):
+        try:
+            text = _zoo_hlo(arch)
+        except Exception as e:  # noqa: BLE001 - an uncompilable arch is a finding
+            findings.append(LintFinding(
+                "zoo-coverage", arch, f"train step does not compile: {e}"))
+            continue
+        opcodes = {opc for (opc, _e) in op_histogram(text)}
+        unmapped = sorted(
+            opc for opc in opcodes
+            if opc not in HLO_TO_TABLE and opc not in STRUCTURAL_OPS
+            and opc not in ZOO_ALLOWLIST and opc != "custom-call")
+        for opc in unmapped:
+            findings.append(LintFinding(
+                "zoo-coverage", arch,
+                f"opcode '{opc}' is neither priced (HLO_TO_TABLE), "
+                f"structural, nor allowlisted"))
+    return findings
+
+
+def run_lints(lowering: bool = False, zoo: bool = False,
+              archs: Iterable[str] | None = None) -> list[LintFinding]:
+    """All static lints. The trace-only set always runs; ``lowering`` and
+    ``zoo`` opt into the compile-needing (still device-free) sets."""
+    findings = lint_table_mapping() + lint_guard_identity()
+    if lowering:
+        findings += lint_registry_lowering()
+    if zoo:
+        findings += lint_zoo(archs)
+    return findings

@@ -104,6 +104,24 @@ class CompileCache:
             return None
         return compiled, entry.get("extra")
 
+    def peek_extra(self, key: tuple) -> Any:
+        """Read only the ``extra`` sidecar stored under ``key``, or None.
+
+        Unlike :meth:`load` this never deserializes the executable, so it is
+        cheap enough for static consumers (``repro.audit`` reads the
+        optimized-HLO text probes rode into the cache without touching XLA).
+        """
+        path = self.entry_path(key)
+        if not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                return pickle.load(f).get("extra")
+        except Exception:  # noqa: BLE001 - stale/foreign entry
+            with self._lock:
+                self.stats.errors += 1
+            return None
+
     def store(self, key: tuple, compiled: Any, extra: Any = None) -> bool:
         """Serialize ``compiled`` under ``key``; False when unsupported."""
         ser = _serializer()
@@ -204,3 +222,18 @@ def fidelity_key(env: Any, op: str, opt_level: str, dtype: str,
     """Cache key layout: the DB record key plus a fidelity tail."""
     return (env["device_kind"], env["backend"], env["jax_version"],
             op, opt_level, dtype, fidelity)
+
+
+def hlo_extra(compiled: Any) -> str | None:
+    """Optimized-HLO text of a freshly compiled executable, or None.
+
+    The standard ``extra`` payload measurement compiles ride into the cache:
+    a deserialized executable cannot be asked for ``as_text()`` on every
+    backend, but a *fresh* compile can — storing the text at compile time is
+    what lets ``repro.audit`` statically verify warm artifacts without
+    re-invoking XLA.
+    """
+    try:
+        return compiled.as_text()
+    except Exception:  # noqa: BLE001 - backend without HLO text access
+        return None

@@ -105,6 +105,7 @@ class OpLine:
     opcode: str
     rest: str                 # text after the opening paren of operands
     operands: list[str]
+    is_root: bool = False     # the computation's ROOT-marked op
 
 
 @dataclasses.dataclass
@@ -166,7 +167,8 @@ def parse_module(hlo_text: str) -> dict[str, Computation]:
         seg = rest if close < 0 else rest[:close]
         operands = re.findall(r"%([\w.\-]+)", seg)
         op = OpLine(name=name, result_type=rtype, opcode=opcode, rest=rest,
-                    operands=operands)
+                    operands=operands,
+                    is_root=line.lstrip().startswith("ROOT "))
         cur.ops.append(op)
         cur.shapes[name] = rtype
     return comps

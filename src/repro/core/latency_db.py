@@ -137,6 +137,27 @@ class LatencyDB:
         for r in recs:
             self.add(r)
 
+    def annotate(self, key: tuple, **kv: str | None) -> LatencyRecord | None:
+        """Merge ``key=value`` tokens into a record's notes, in place.
+
+        Existing tokens with the same key are replaced; a value of ``None``
+        deletes the token. ``measured_at`` is untouched, so on a concurrent
+        ``save`` the annotated copy wins merge ties against the un-annotated
+        on-disk copy of itself (ties keep the in-memory value). Used by
+        ``repro.audit`` to persist ``audit=...`` verdicts. Returns the
+        updated record, or None when the key is absent.
+        """
+        rec = self._records.get(tuple(key))
+        if rec is None:
+            return None
+        drop = set(kv)
+        kept = [tok for tok in rec.notes.split()
+                if tok.partition("=")[0] not in drop]
+        added = [f"{k}={v}" for k, v in kv.items() if v is not None]
+        rec = dataclasses.replace(rec, notes=" ".join(kept + added))
+        self.add(rec)
+        return rec
+
     def records(self) -> list[LatencyRecord]:
         return list(self._records.values())
 
@@ -411,6 +432,33 @@ class LatencyDB:
         headers = ["category", "op", "dtype"] + [
             {"O3": "Optimized", "O0": "Non-Optimized"}.get(lv, lv) for lv in opt_levels]
         return markdown_table(headers, rows)
+
+    def audit_status(self) -> dict[str, list[LatencyRecord]]:
+        """Records grouped by audit verdict status (from the ``audit=``
+        notes token; records never audited group under ``unaudited``)."""
+        groups: dict[str, list[LatencyRecord]] = {}
+        for r in sorted(self._records.values(),
+                        key=lambda r: (self._natural(r.op), r.opt_level)):
+            tok = parse_kv_notes(r.notes).get("audit", "unaudited")
+            groups.setdefault(tok.partition(":")[0], []).append(r)
+        return groups
+
+    def audit_markdown(self) -> str:
+        """Audit-verdict table surfacing failed and unaudited rows first."""
+        order = {"transformed": 0, "opaque": 1, "unaudited": 2, "ok": 3}
+        rows = []
+        for status, recs in sorted(self.audit_status().items(),
+                                   key=lambda kv: order.get(kv[0], 9)):
+            for r in recs:
+                kv = parse_kv_notes(r.notes)
+                tok = kv.get("audit", "unaudited")
+                cause = (tok.partition(":")[2] or
+                         kv.get("audit_transform", "") or "—")
+                rows.append([r.op, r.opt_level, r.dtype, status, cause,
+                             f"{r.net_latency_ns:.1f}"])
+        return markdown_table(
+            ["op", "opt", "dtype", "audit", "cause/transform", "net ns"],
+            rows)
 
     @staticmethod
     def _host_twin(base: str) -> str:

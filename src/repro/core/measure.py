@@ -83,16 +83,26 @@ def compile_chain(spec: OpSpec, n: int, opt_level: str, *args: Any,
     if opt_level == "O0":
         return fn
     if cache is not None and env is not None:
-        from repro.core.compile_cache import fidelity_key
+        from repro.core.compile_cache import hlo_extra
 
-        key = fidelity_key(env, spec.name, opt_level, spec.dtype,
-                           f"chain{n}" + (".x64" if _needs_x64(spec) else ""))
+        key = chain_cache_key(spec, n, opt_level, env)
         compiled, _, _ = cache.load_or_compile(
-            key, lambda: _aot_compile(fn, opt_level, *args))
+            key, lambda: _aot_compile(fn, opt_level, *args), extra=hlo_extra)
         return compiled
     # no cache: legacy per-level compilation (O3 stays a lazy jit, compiled
     # at the first warmup call), so the serial path's behavior is unchanged
     return compile_at_level(fn, opt_level, *args)
+
+
+def chain_cache_key(spec: OpSpec, n: int, opt_level: str,
+                    env: Mapping[str, str]) -> tuple:
+    """The CompileCache key one chain compile is stored under — shared with
+    ``repro.audit`` so the auditor can peek the optimized-HLO ``extra`` a
+    measurement run rode into the cache instead of recompiling."""
+    from repro.core.compile_cache import fidelity_key
+
+    return fidelity_key(env, spec.name, opt_level, spec.dtype,
+                        f"chain{n}" + (".x64" if _needs_x64(spec) else ""))
 
 
 def _aot_compile(fn: Callable, opt_level: str, *args: Any) -> Callable:

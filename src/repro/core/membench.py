@@ -116,6 +116,15 @@ class PreparedChase:
     f2: "jax.stages.Compiled"
 
 
+def chase_cache_key(ws: int, steps: int, line_bytes: int, env) -> tuple:
+    """The CompileCache key one chase compile is stored under — shared with
+    ``repro.audit`` so the auditor can peek the optimized-HLO sidecar."""
+    from repro.core.compile_cache import fidelity_key
+
+    return fidelity_key(env, f"mem.chase.ws{ws}", "O3", "int32",
+                        f"steps{steps}.line{line_bytes}")
+
+
 def _compile_chase(n: int, ring: jax.Array, start: jax.Array, ws: int,
                    line_bytes: int, cache=None, env=None):
     """One chase-length callable, AOT through the persistent cache if given.
@@ -124,12 +133,12 @@ def _compile_chase(n: int, ring: jax.Array, start: jax.Array, ws: int,
     first warmup call), so the serial path's behavior is unchanged.
     """
     if cache is not None and env is not None:
-        from repro.core.compile_cache import fidelity_key
+        from repro.core.compile_cache import hlo_extra
 
-        key = fidelity_key(env, f"mem.chase.ws{ws}", "O3", "int32",
-                           f"steps{n}.line{line_bytes}")
+        key = chase_cache_key(ws, n, line_bytes, env)
         compiled, _, _ = cache.load_or_compile(
-            key, lambda: jax.jit(chase_fn(n)).lower(ring, start).compile())
+            key, lambda: jax.jit(chase_fn(n)).lower(ring, start).compile(),
+            extra=hlo_extra)
         return compiled
     return jax.jit(chase_fn(n))
 

@@ -39,11 +39,11 @@ def _cached_aot(fn: Callable, args: tuple, op: str, fidelity: str,
     factories jit internally), preserving the legacy serial behavior.
     """
     if cache is not None and env is not None:
-        from repro.core.compile_cache import fidelity_key
+        from repro.core.compile_cache import fidelity_key, hlo_extra
 
         key = fidelity_key(env, op, "O3", dtype, fidelity)
         compiled, _, _ = cache.load_or_compile(
-            key, lambda: jax.jit(fn).lower(*args).compile())
+            key, lambda: jax.jit(fn).lower(*args).compile(), extra=hlo_extra)
         return compiled
     return fn
 

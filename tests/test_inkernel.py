@@ -144,8 +144,8 @@ def test_guard_netting_uses_inkernel_baseline(monkeypatch, tmp_path):
     # an exact 350 proves the dispatch baseline was never consulted
     assert rec.latency_ns == 400.0
     assert rec.net_latency_ns == 350.0
-    rec3 = run_one(_spec("mul24"), "db2.json")  # guard=3
-    assert rec3.net_latency_ns == 250.0  # 400 - 3*50
+    rec3 = run_one(_spec("mul24"), "db2.json")  # guard=2 (one mask CSE'd)
+    assert rec3.net_latency_ns == 300.0  # 400 - 2*50
     rec0 = run_one(_spec("fma.float32"), "db3.json")  # guard=0: no baseline
     assert rec0.net_latency_ns == 400.0
 
