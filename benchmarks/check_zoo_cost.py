@@ -1,0 +1,79 @@
+"""CI gate: per-model zoo pricing coverage must not regress below the floor.
+
+Compares the coverage metrics JSON emitted by ``benchmarks.zoo_cost`` against
+the checked-in floor (``benchmarks/zoo_cost_floor.json``). Two invariants per
+model row:
+
+* **custom-call coverage** — every synthesized TPU-form fused call site must
+  price from a measured ``inkernel.fused.*`` row (floor 1.0 everywhere: an
+  in-repo kernel priced at ``default_ns`` is a regression, full stop);
+* **opcode coverage** — the fraction of the row's real HLO priced from
+  measured table rows must stay at or above the recorded floor (a mapping
+  or registry regression silently inflates the default-cost bucket).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_zoo_cost \
+        --metrics /tmp/zoo_cost.json --floor benchmarks/zoo_cost_floor.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Sequence
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--metrics", required=True,
+                    help="coverage JSON from benchmarks.zoo_cost --json")
+    ap.add_argument("--floor",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "zoo_cost_floor.json"),
+                    help="checked-in per-model coverage floor")
+    args = ap.parse_args(argv)
+
+    for path in (args.metrics, args.floor):
+        if not os.path.exists(path):
+            print(f"error: no file at {path}", file=sys.stderr)
+            return 2
+    with open(args.metrics) as f:
+        metrics = json.load(f)
+    with open(args.floor) as f:
+        floor = json.load(f)
+
+    violations = []
+    for model, bounds in sorted(floor.items()):
+        row = metrics.get(model)
+        if row is None:
+            violations.append(f"{model}: missing from the metrics — the "
+                              "zoo run dropped a model row")
+            continue
+        cc = row.get("custom_call_coverage", 0.0)
+        if cc < bounds["custom_call_coverage"]:
+            unpriced = ", ".join(row.get("unpriced_custom_calls", [])) or "?"
+            violations.append(
+                f"{model}: custom-call coverage {cc:.1%} < floor "
+                f"{bounds['custom_call_coverage']:.1%} (unpriced: {unpriced})")
+        oc = row.get("opcode_coverage", 0.0)
+        if oc < bounds["opcode_coverage"]:
+            violations.append(
+                f"{model}: opcode coverage {oc:.1%} < floor "
+                f"{bounds['opcode_coverage']:.1%}")
+    extra = sorted(set(metrics) - set(floor))
+    for model in extra:
+        print(f"note: {model} has no floor entry yet — add it to "
+              f"{args.floor}")
+
+    print(f"checked {len(floor)} model row(s) against the floor")
+    for v in violations:
+        print(f"VIOLATION: {v}", file=sys.stderr)
+    if not violations:
+        print("zoo pricing coverage at or above the floor everywhere")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,275 @@
+"""Model-zoo cost table: price every config's custom-calls from measured rows.
+
+Twelve rows — the ten registry architectures' smoke train steps plus the
+serving-tiny prefill and decode cells — each priced two ways by
+:class:`repro.core.perfmodel.HloLatencyEstimator`:
+
+* the **real** optimized HLO of the row (compiled on this host), giving the
+  opcode coverage the estimator has for the standard instruction mix;
+* the row's **TPU-form fused custom-calls**: the CPU backend inlines Pallas
+  kernels, so the ``tpu_custom_call`` sites a TPU lowering would carry are
+  synthesized from the config (one ``flash_attention`` / ``flash_decode``
+  per attention mixer, one ``mamba_scan`` per Mamba mixer, the rmsnorm
+  sites per layer) with the config's real shapes, then priced through
+  ``hlo_analysis.CUSTOM_CALL_TARGETS`` against the measured
+  ``inkernel.fused.<name>`` rows — *never* at ``default_ns``.
+
+The fused rows are measured in place if missing (``--plan fused`` via the
+Session cache, so re-runs are hits). Output: ``results/model_zoo_cost.md``
+plus a machine-readable coverage JSON for ``benchmarks.check_zoo_cost``.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.zoo_cost --db /tmp/db.json \
+        --out results/model_zoo_cost.md --json /tmp/zoo_cost.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Sequence
+
+ZOO_B, ZOO_S = 2, 32          # the smoke-recipe batch/seq (audit lint's zoo)
+
+
+# ---------------------------------------------------------------- synthesis
+def _head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.n_heads
+
+
+def fused_sites(cfg, phase: str) -> list[tuple[str, list[tuple], tuple]]:
+    """``(kernel, operand_shapes, result_shape)`` per TPU-form call site.
+
+    One site per mixer the repo has a fused kernel for: ``attn`` mixers
+    dispatch flash_attention (train/prefill) or flash_decode (decode-step),
+    ``mamba`` mixers dispatch mamba_scan, and every layer carries its two
+    rmsnorm sites plus the stack's final norm. mlstm/slstm mixers have no
+    in-repo fused kernel — they lower to plain HLO and are priced by the
+    opcode terms, so no site is synthesized for them.
+    """
+    b, s, d = ZOO_B, ZOO_S, cfg.d_model
+    h, hd = cfg.n_heads, _head_dim(cfg)
+    kvh = cfg.n_kv_heads or h
+    sites: list[tuple[str, list[tuple], tuple]] = []
+    period = cfg.period or ((("attn", "dense"),))
+    for i in range(cfg.n_layers):
+        mixer = period[i % len(period)][0]
+        if mixer == "attn":
+            if phase == "decode":
+                sites.append(("flash_decode",
+                              [(b, h, hd), (b, s, kvh, hd), (b, s, kvh, hd)],
+                              (b, h, hd)))
+            else:
+                sites.append(("flash_attention",
+                              [(b, s, h, hd), (b, s, kvh, hd),
+                               (b, s, kvh, hd)],
+                              (b, s, h, hd)))
+        elif mixer == "mamba":
+            di = int(cfg.d_model * cfg.ssm_expand)
+            st = int(cfg.ssm_state)
+            sites.append(("mamba_scan",
+                          [(b, s, di), (b, s, di), (b, s, st), (b, s, st)],
+                          (b, s, di)))
+        rows = b if phase == "decode" else b * s
+        sites.append(("rmsnorm", [(rows, d), (d,)], (rows, d)))
+        sites.append(("rmsnorm", [(rows, d), (d,)], (rows, d)))
+    rows = b if phase == "decode" else b * s
+    sites.append(("rmsnorm", [(rows, d), (d,)], (rows, d)))
+    return sites
+
+
+def _shape(dims: tuple) -> str:
+    return "f32[" + ",".join(str(int(d)) for d in dims) + "]"
+
+
+def fused_hlo(model: str, sites: Sequence[tuple[str, list[tuple], tuple]]
+              ) -> str:
+    """TPU-form HLO module text holding exactly the synthesized call sites.
+
+    The module never compiles or runs — it exists for the estimator's text
+    analysis. Every site is a ``tpu_custom_call`` whose Mosaic-style config
+    embeds the kernel name (the real TPU lowering's shape: the target alone
+    is opaque, the payload names the kernel), so pricing exercises the same
+    ``resolve_custom_call`` path a production module would.
+    """
+    lines = [f"HloModule zoo_fused_{model.replace('-', '_').replace('.', '_')}",
+             "", "ENTRY %main () -> (f32[1]) {"]
+    n = 0
+    results = []
+    for kernel, operands, result in sites:
+        ops = []
+        for shp in operands:
+            lines.append(f"  %p{n} = {_shape(shp)} parameter({n})")
+            ops.append(f"%p{n}")
+            n += 1
+        lines.append(
+            f"  %site{len(results)} = {_shape(result)} "
+            f"custom-call({', '.join(ops)}), "
+            f'custom_call_target="tpu_custom_call", '
+            f'backend_config="mosaic kernel={kernel}_kernel"')
+        results.append(f"%site{len(results)}")
+    lines.append(f"  ROOT %out = (f32[1]) tuple({results[0]})")
+    lines.append("}")
+    return "\n".join(lines)
+
+
+# -------------------------------------------------------------------- rows
+def zoo_rows(archs: Sequence[str] | None = None):
+    """Yield ``(model, phase, real_hlo_text, cfg)`` for all twelve rows."""
+    from repro.audit.lint import _zoo_hlo
+    from repro.configs.registry import all_arch_ids, get
+
+    for arch in (archs if archs is not None else all_arch_ids()):
+        yield arch, "train", _zoo_hlo(arch), get(arch).smoke
+
+    import jax
+
+    from repro.api.probes import serving_tiny_config
+    from repro.models import transformer
+    from repro.serving import Engine
+
+    cfg, rt = serving_tiny_config()
+    eng = Engine(transformer.init_lm(jax.random.PRNGKey(0), cfg), cfg, rt)
+    lowered, _ = eng.lower_prefill(ZOO_B, ZOO_S)
+    yield "serving-tiny", "prefill", lowered.compile().as_text(), cfg
+    lowered, _ = eng.lower_decode(ZOO_B, ZOO_S)
+    yield "serving-tiny", "decode", lowered.compile().as_text(), cfg
+
+
+def ensure_fused_rows(db_path: str, compile_cache: str | None = None) -> None:
+    """Measure the rows the pricing needs into the DB (cache hits skip).
+
+    Both plans: ``quick`` fills the instruction-table rows the opcode
+    coverage column prices from, ``fused`` fills the ``inkernel.fused.*``
+    slope rows the custom-call sites price from — so a fresh DB path yields
+    the complete table in one command.
+    """
+    from repro.api.plan import named_plan
+    from repro.api.session import Session
+
+    session = Session(db=db_path, compile_cache=compile_cache)
+    for plan in ("quick", "fused"):
+        result = session.run(named_plan(plan))
+        for r in result.failed:
+            f = r.failure
+            print(f"  FAILED {f.op}@{f.opt_level}: {f.error_type}: "
+                  f"{f.message}", file=sys.stderr)
+        if result.failed:
+            raise SystemExit(f"{plan}-plan measurement failed; cannot "
+                             "price the zoo")
+
+
+def price_zoo(db, archs: Sequence[str] | None = None
+              ) -> tuple[str, dict[str, dict]]:
+    """``(markdown, metrics)``: the table and per-model coverage numbers."""
+    from repro.core.latency_db import current_environment
+    from repro.core.perfmodel import HloLatencyEstimator
+
+    env = current_environment()
+    filters = {k: env[k] for k in ("device_kind", "backend", "jax_version")}
+    est = HloLatencyEstimator(db, filters=filters)
+
+    header = ("| model | phase | opcode coverage | est total (us) "
+              "| fused sites | fused priced | fused est (us) "
+              "| unpriced custom-calls |")
+    lines = [header, "|---" * 8 + "|"]
+    metrics: dict[str, dict] = {}
+    for model, phase, hlo_text, cfg in zoo_rows(archs):
+        base = est.estimate(hlo_text)
+        sites = fused_sites(cfg, phase)
+        fused = est.estimate(fused_hlo(model, sites))
+        cc_unpriced = [(op, c) for op, c in fused.unpriced_opcodes
+                       if op.startswith("custom-call:")]
+        n_unpriced = sum(c for _, c in cc_unpriced)
+        cc_cov = (fused.priced_instances / len(sites)) if sites else 1.0
+        fused_ns = sum(v.ns for k, v in fused.by_class.items()
+                       if k.startswith("fused:"))
+        key = f"{model}.{phase}" if model == "serving-tiny" else model
+        metrics[key] = {
+            "phase": phase,
+            "opcode_coverage": round(base.coverage, 4),
+            "custom_call_sites": len(sites),
+            "custom_call_priced": fused.priced_instances,
+            "custom_call_coverage": round(cc_cov, 4),
+            "unpriced_custom_calls": [op for op, _ in cc_unpriced],
+        }
+        lines.append(
+            f"| {model} | {phase} | {base.coverage:.1%} "
+            f"| {base.total_ns / 1e3:.1f} | {len(sites)} "
+            f"| {fused.priced_instances:g} | {fused_ns / 1e3:.1f} "
+            f"| {', '.join(op for op, _ in cc_unpriced) or '-'} |")
+        print(f"  {key}: opcode coverage {base.coverage:.1%}, "
+              f"{fused.priced_instances:g}/{len(sites)} fused sites priced"
+              + (f", UNPRICED: {n_unpriced:g}" if n_unpriced else ""))
+    return "\n".join(lines), metrics
+
+
+def write_report(md_table: str, db, out_path: str) -> None:
+    from repro.core.latency_db import current_environment
+
+    env = current_environment()
+    rows = sorted(r.op for r in db.records()
+                  if r.op.startswith("inkernel.fused."))
+    with open(out_path, "w") as f:
+        f.write("# Model zoo cost table\n\n")
+        f.write(
+            "Every registry architecture's smoke train step plus the "
+            "serving-tiny prefill/decode cells, priced by the measured-row "
+            "estimator (`repro.core.perfmodel`). Custom-calls are the "
+            "TPU-form fused Pallas kernels, resolved through "
+            "`CUSTOM_CALL_TARGETS` and priced from the measured "
+            "`inkernel.fused.*` slope rows scaled by the dataflow-certified "
+            "unit bytes — no in-repo kernel is priced at `default_ns`. "
+            "See docs/audit.md (§Inside the custom-call) and "
+            "docs/inkernel.md.\n\n")
+        f.write(f"Environment: {env['device_kind']}/{env['backend']}, "
+                f"jax {env['jax_version']}. Measured fused rows: "
+                f"{', '.join(rows) or 'none'}.\n\n")
+        f.write(md_table)
+        f.write("\n\nRegenerate: `PYTHONPATH=src python -m benchmarks."
+                "zoo_cost --db <db.json> --out results/model_zoo_cost.md`.\n")
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--db", default="/tmp/latency_db.json",
+                    help="LatencyDB JSON path (fused rows measured into it "
+                         "if missing)")
+    ap.add_argument("--out", default="results/model_zoo_cost.md",
+                    help="markdown table path")
+    ap.add_argument("--json", default=None,
+                    help="also write per-model coverage metrics JSON "
+                         "(benchmarks.check_zoo_cost's input)")
+    ap.add_argument("--archs", default=None,
+                    help="comma-separated arch subset (default: all ten + "
+                         "the serving rows)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="never measure; fail if the fused rows are absent")
+    args = ap.parse_args(argv)
+
+    if not args.no_measure:
+        ensure_fused_rows(args.db, args.compile_cache)
+
+    from repro.core.latency_db import LatencyDB
+
+    db = LatencyDB(args.db)
+    if not any(r.op.startswith("inkernel.fused.") for r in db.records()):
+        print(f"error: no inkernel.fused.* rows in {args.db} — run "
+              "`python -m repro characterize --plan fused` first",
+              file=sys.stderr)
+        return 2
+    archs = [a.strip() for a in args.archs.split(",")] if args.archs else None
+    md_table, metrics = price_zoo(db, archs)
+    write_report(md_table, db, args.out)
+    print(f"zoo cost table: {len(metrics)} row(s) -> {args.out}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        print(f"coverage metrics -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

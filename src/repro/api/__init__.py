@@ -16,7 +16,7 @@ that pipeline as an API:
 * :class:`ResultSet` — per-probe outcomes plus report helpers.
 
 CLI: ``python -m repro characterize --plan
-quick|table2|memory|inkernel|memory-inkernel|serving|slo|full
+quick|table2|memory|inkernel|memory-inkernel|fused|serving|slo|full
 [--shard auto|N]`` and ``python -m repro serve-slo --rates 20,50,100``
 (predicted-vs-measured serving SLO sweep, docs/traffic.md).
 The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
@@ -24,8 +24,8 @@ The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
 """
 from repro.api.plan import (PLAN_NAMES, QUICK_OPS, SERVING_CELLS, SLO_RATES,
                             Plan, named_plan)
-from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
-                              KernelChainProbe, KernelProbe,
+from repro.api.probes import (ClockOverheadProbe, FusedKernelProbe,
+                              InstructionProbe, KernelChainProbe, KernelProbe,
                               MemoryChaseProbe, MemoryProbe, Probe,
                               ProbeContext, ServingCostProbe, SloProbe,
                               serving_tiny_config)
@@ -34,8 +34,9 @@ from repro.api.session import ProbeResult, ResultSet, Session
 __all__ = [
     "PLAN_NAMES", "QUICK_OPS", "SERVING_CELLS", "SLO_RATES", "Plan",
     "named_plan",
-    "ClockOverheadProbe", "InstructionProbe", "KernelChainProbe",
-    "KernelProbe", "MemoryChaseProbe", "MemoryProbe", "Probe",
+    "ClockOverheadProbe", "FusedKernelProbe", "InstructionProbe",
+    "KernelChainProbe", "KernelProbe", "MemoryChaseProbe", "MemoryProbe",
+    "Probe",
     "ProbeContext", "ProbeResult", "ResultSet", "Session",
     "ServingCostProbe", "SloProbe", "serving_tiny_config",
 ]

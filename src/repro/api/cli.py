@@ -118,7 +118,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "registry spec and check target-opcode presence")
     au.add_argument("--zoo", action="store_true",
                     help="with --lint: also compile the model zoo and check "
-                         "every HLO opcode is priced/structural/allowlisted")
+                         "every HLO opcode is priced/structural/allowlisted "
+                         "(custom-calls resolve through the fused-kernel "
+                         "signature registry)")
+    au.add_argument("--dataflow", action="store_true",
+                    help="with --lint: also open every in-repo Pallas "
+                         "kernel's jaxpr and certify serialization, "
+                         "residency and signature (docs/audit.md)")
     au.add_argument("--archs", default=None,
                     help="comma-separated arch filter for --zoo "
                          "(default: the full registry)")
@@ -263,7 +269,7 @@ def cmd_audit(args: argparse.Namespace) -> int:
         archs = ([a.strip() for a in args.archs.split(",")]
                  if args.archs else None)
         findings = run_lints(lowering=args.lowering, zoo=args.zoo,
-                             archs=archs)
+                             archs=archs, dataflow=args.dataflow)
         if findings:
             print(f"{len(findings)} lint finding(s):")
             for f in findings:
@@ -275,6 +281,8 @@ def cmd_audit(args: argparse.Namespace) -> int:
                 scope += "+lowering"
             if args.zoo:
                 scope += "+zoo"
+            if args.dataflow:
+                scope += "+dataflow"
             print(f"lints clean ({scope})")
 
     did_db = False
@@ -329,6 +337,10 @@ def cmd_audit(args: argparse.Namespace) -> int:
         for v in verdicts:
             if v.status in ("opaque", "unaudited"):
                 print(f"  {v.status.upper()} {v.op}@{v.opt_level}: {v.cause}")
+        for v in verdicts:
+            if v.status == "audited":
+                print(f"  AUDITED {v.op}@{v.opt_level}"
+                      + (f": {v.detail}" if v.detail else ""))
         failed += len(bad)
     elif args.db and not args.lint and not args.attribution:
         print(f"error: DB {args.db} does not exist (nothing to audit; "

@@ -7,8 +7,8 @@ them — so "the full paper reproduction" is one Plan expression, and CI's
 quick pass is the same expression with a keep-set applied.
 
 Named plans (``quick`` / ``table2`` / ``memory`` / ``inkernel`` /
-``memory-inkernel`` / ``serving`` / ``slo`` / ``full``) back the ``python -m
-repro characterize --plan`` CLI.
+``memory-inkernel`` / ``fused`` / ``serving`` / ``slo`` / ``full``) back the
+``python -m repro characterize --plan`` CLI.
 """
 from __future__ import annotations
 
@@ -19,8 +19,8 @@ from repro.core import chains
 from repro.core.chains import OpSpec
 from repro.core.optlevels import OPT_LEVELS
 
-from repro.api.probes import (ClockOverheadProbe, InstructionProbe,
-                              KernelChainProbe, KernelProbe,
+from repro.api.probes import (ClockOverheadProbe, FusedKernelProbe,
+                              InstructionProbe, KernelChainProbe, KernelProbe,
                               MemoryChaseProbe, MemoryProbe, Probe,
                               ServingCostProbe, SloProbe)
 
@@ -31,7 +31,7 @@ QUICK_OPS = ("add", "mul", "mad", "div.s.regular", "div.s.irregular",
              "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16")
 
 PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "memory-inkernel",
-              "serving", "slo", "full")
+              "fused", "serving", "slo", "full")
 
 # Representative (batch, prompt_len) serving cells: a single-sequence short
 # prompt and a batched longer one — enough to expose both phases' scaling
@@ -230,6 +230,19 @@ class Plan:
             name="representative")
 
     @staticmethod
+    def fused(names: Sequence[str] | None = None,
+              lens: tuple[int, int] | None = None) -> "Plan":
+        """One :class:`FusedKernelProbe` per in-repo fused Pallas kernel
+        (flash_attention / flash_decode / mamba_scan / rmsnorm): the
+        ``inkernel.fused.<name>`` rows the estimator prices zoo-model
+        custom-calls from (see ``results/model_zoo_cost.md``)."""
+        from repro import inkernel as ik
+
+        names = tuple(names if names is not None else ik.FUSED_KERNELS)
+        return Plan(tuple(FusedKernelProbe(n, lens=lens) for n in names),
+                    name="fused")
+
+    @staticmethod
     def inkernel(registry: Sequence[OpSpec] | None = None,
                  ops: Iterable[str] | None = None,
                  categories: Iterable[str] | None = None,
@@ -281,8 +294,8 @@ def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
 
 def named_plan(name: str) -> Plan:
     """The CLI's plan registry.
-    quick | table2 | memory | inkernel | memory-inkernel | serving | slo |
-    full."""
+    quick | table2 | memory | inkernel | memory-inkernel | fused | serving |
+    slo | full."""
     if name == "quick":
         plan = (Plan.clock_overhead(("O0", "O3"))
                 + Plan.instructions(ops=QUICK_OPS, opt_levels=("O0", "O3"))
@@ -297,6 +310,8 @@ def named_plan(name: str) -> Plan:
         plan = Plan.inkernel()
     elif name == "memory-inkernel":
         plan = Plan.memory_inkernel()
+    elif name == "fused":
+        plan = Plan.fused()
     elif name == "serving":
         plan = Plan.serving()
     elif name == "slo":
@@ -310,6 +325,7 @@ def named_plan(name: str) -> Plan:
                 + Plan.kernels(("fma", "add", "rsqrt"))
                 + Plan.inkernel()
                 + Plan.memory_inkernel()
+                + Plan.fused()
                 + Plan.serving(with_deps=False)
                 + Plan.slo(with_deps=False))
     else:

@@ -448,6 +448,81 @@ class KernelChainProbe(Probe):
 KernelChainProbe._baselines = weakref.WeakKeyDictionary()
 
 
+class FusedKernelProbe(Probe):
+    """One in-repo fused Pallas kernel as a two-size workload slope
+    (``inkernel.fused.<name>`` rows; plan name ``fused``).
+
+    The same netting algebra as :class:`KernelChainProbe`, with the chain
+    length replaced by a workload-unit count (KV blocks for the attention
+    kernels, sequence chunks for the SSM scan, row blocks for rmsnorm): two
+    sizes share the launch path and block shapes, so the slope is the pure
+    per-unit kernel cost. The builder (``repro.inkernel.fused.build_fused``)
+    is shared with the dataflow auditor, whose signature-linearity
+    certificate guarantees the slope's denominator; the certified per-unit
+    HBM byte count rides in the record notes (``unit_bytes=``) so
+    ``HloLatencyEstimator`` can scale the row to a zoo model's custom-call
+    of a different shape.
+    """
+
+    def __init__(self, name: str, lens: tuple[int, int] | None = None,
+                 reps: int = 5):
+        from repro import inkernel
+
+        if name not in inkernel.FUSED_KERNELS:
+            raise ValueError(f"unknown fused kernel {name!r}; known: "
+                             f"{', '.join(inkernel.FUSED_KERNELS)}")
+        self.name = name
+        self.lens = tuple(lens) if lens is not None else tuple(
+            inkernel.FUSED_LENS)
+        self.reps = reps
+        self.opt_level = "O3"
+        self.dtype = "float32"
+        self.category = "kernel"
+        self.base_op = f"inkernel.fused.{name}"
+        self.op = self.base_op
+        if self.lens != tuple(inkernel.FUSED_LENS):
+            self.op += f".l{self.lens[0]}-{self.lens[1]}"
+
+    def match_names(self) -> frozenset[str]:
+        return frozenset((self.op, self.base_op, self.name))
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        from repro import inkernel
+
+        m = inkernel.measure_fused_full(self.name, lens=self.lens,
+                                        timer=ctx.timer, reps=self.reps)
+        return self._finish(ctx, m)
+
+    def prepare(self, ctx: ProbeContext):
+        from repro import inkernel
+
+        return inkernel.prepare_fused(self.name, lens=self.lens,
+                                      reps=self.reps,
+                                      cache=ctx.compile_cache, env=ctx.env)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        from repro import inkernel
+
+        if prepared is None:
+            return self.run(ctx)
+        m = inkernel.run_prepared_fused(prepared, ctx.timer)
+        return self._finish(ctx, m)
+
+    def _finish(self, ctx: ProbeContext, m: Measurement) -> LatencyRecord:
+        notes = f"pallas fused kernel lens={self.lens[0]}-{self.lens[1]}"
+        try:
+            from repro.audit.dataflow import fused_unit
+
+            unit = fused_unit(self.name, self.lens)
+            notes += (f" unit_bytes={unit['bytes']} "
+                      f"unit_ops={sum(unit['ops'].values())}")
+        except Exception:
+            # the certificate is attached by the audit pass; a failure to
+            # derive it here must not lose the measurement
+            pass
+        return self._record(ctx, m, notes=notes)
+
+
 class MemoryChaseProbe(Probe):
     """In-kernel pointer chase at one working-set size: the memory-hierarchy
     rows of the in-pipeline method (paper Table IV / Fig. 6 analogs).

@@ -13,12 +13,19 @@ When a count is wrong, :mod:`repro.audit.transforms` names the XLA pass
 family responsible (folded, strength-reduced, CSE'd, hoisted, ...) — the
 paper's Table III taxonomy — and generates ``results/opt_attribution.md``.
 
+Pallas rows are not opaque: :mod:`repro.audit.dataflow` opens each kernel's
+closed jaxpr and certifies serialization (the carry chain is one dependent
+path), residency (every ref in its declared memory space), and signature
+(per-invocation op multiset + HBM bytes) — verdicts carry the ``audited``
+status and the fused-kernel signature registry feeds custom-call pricing
+in ``core.perfmodel``.
+
 Entry points: ``python -m repro audit`` (CLI), ``Session(audit=True)``
 (verdicts attached to records as they are measured), or :func:`audit_db`
 (verify an existing DB in place). Verdicts persist in record notes as
-``audit=ok`` / ``audit=transformed:<cause>`` / ``audit=opaque:<reason>`` /
-``audit=unaudited:<reason>`` and round-trip through
-:func:`repro.utils.parse_kv_notes`. See docs/audit.md.
+``audit=ok`` / ``audit=audited`` / ``audit=transformed:<cause>`` /
+``audit=opaque:<reason>`` / ``audit=unaudited:<reason>`` and round-trip
+through :func:`repro.utils.parse_kv_notes`. See docs/audit.md.
 """
 from __future__ import annotations
 
@@ -28,14 +35,18 @@ from repro.audit.chain_check import (ChainVerdict, audit_chase,
                                      audit_clock_overhead, audit_kernel,
                                      audit_spec, audit_target, expected_step,
                                      path_counts)
+from repro.audit.dataflow import (ChainCert, KernelCert, RefCert,
+                                  audit_fused, fused_registry, kernel_cert,
+                                  kernel_certs)
 from repro.audit.lint import LintFinding, run_lints
 from repro.audit.transforms import classify, write_attribution
 
 __all__ = [
-    "ChainVerdict", "LintFinding", "audit_chase", "audit_clock_overhead",
-    "audit_db", "audit_kernel", "audit_record", "audit_spec", "audit_target",
-    "classify", "expected_step", "path_counts", "run_lints",
-    "write_attribution",
+    "ChainCert", "ChainVerdict", "KernelCert", "LintFinding", "RefCert",
+    "audit_chase", "audit_clock_overhead", "audit_db", "audit_fused",
+    "audit_kernel", "audit_record", "audit_spec", "audit_target", "classify",
+    "expected_step", "fused_registry", "kernel_cert", "kernel_certs",
+    "path_counts", "run_lints", "write_attribution",
 ]
 
 

@@ -371,11 +371,13 @@ def root_is_constant(hlo_text: str) -> bool:
 class ChainVerdict:
     """Outcome of one static integrity check.
 
-    ``status``: ``ok`` (chain count + guard accounting exact), ``transformed``
-    (the compiler broke the chain assumption; ``cause`` names the pass
-    family), ``opaque`` (artifact is not inspectable, e.g. a real-hardware
-    Pallas custom-call), ``unaudited`` (no checker covers this record family
-    or the environment doesn't match).
+    ``status``: ``ok`` (chain count + guard accounting exact), ``audited``
+    (the Pallas kernel jaxpr itself was opened and certified by
+    ``repro.audit.dataflow`` — serialization + residency + signature),
+    ``transformed`` (the compiler broke the chain assumption; ``cause``
+    names the pass family), ``opaque`` (artifact is not inspectable),
+    ``unaudited`` (no checker covers this record family or the environment
+    doesn't match).
     """
 
     op: str
@@ -386,7 +388,7 @@ class ChainVerdict:
 
     @property
     def ok(self) -> bool:
-        return self.status == "ok"
+        return self.status in ("ok", "audited")
 
     @property
     def failed(self) -> bool:
@@ -647,6 +649,48 @@ def audit_kernel(kernel_op: str, lens: tuple[int, int],
 _MEM_RE = re.compile(r"^mem\.chase\.ws(\d+)(?:\.s(\d+)-(\d+))?(?:\.line(\d+))?$")
 _KERNEL_RE = re.compile(
     r"^kernel\.alu_chain\.([a-z0-9]+)(?:\.l(\d+)-(\d+))?(?:\.t(\d+)x(\d+))?$")
+# Pallas-row grammars (see api/probes.py op construction): fused rows,
+# in-kernel memory chase rows, then the generic in-kernel chain rows whose
+# base is a registry spec name (may itself contain dots)
+_FUSED_RE = re.compile(r"^inkernel\.fused\.([a-z0-9_]+)(?:\.l(\d+)-(\d+))?$")
+_INKERNEL_MEM_RE = re.compile(
+    r"^inkernel\.mem\.(\d+)(?:\.l(\d+)-(\d+))?(?:\.line(\d+))?"
+    r"(?:\.(vmem|any))?$")
+_INKERNEL_OP_RE = re.compile(
+    r"^inkernel\.(.+?)(?:\.l(\d+)-(\d+))?(?:\.t(\d+)x(\d+))?$")
+
+
+def _audit_pallas_row(op: str, opt_level: str,
+                      registry: Iterable[OpSpec] | None) -> ChainVerdict:
+    """Route an ``inkernel.*`` row to the dataflow auditor: the kernel jaxpr
+    is opened and certified (serialization/residency/signature) instead of
+    the old blanket ``unaudited: pallas-fori-loop`` answer."""
+    from repro.audit import dataflow
+
+    m = _FUSED_RE.match(op)
+    if m:
+        lens = ((int(m.group(2)), int(m.group(3))) if m.group(2) else None)
+        return dataflow.audit_fused(m.group(1), opt_level, op=op, lens=lens)
+    m = _INKERNEL_MEM_RE.match(op)
+    if m:
+        lens = ((int(m.group(2)), int(m.group(3))) if m.group(2) else None)
+        line = int(m.group(4)) if m.group(4) else 64
+        return dataflow.audit_inkernel_mem(
+            int(m.group(1)), opt_level, op=op, space=m.group(5),
+            line_bytes=line, lens=lens)
+    m = _INKERNEL_OP_RE.match(op)
+    if m:
+        specs = list(registry) if registry is not None else default_registry()
+        spec = next((s for s in specs if s.name == m.group(1)), None)
+        if spec is not None:
+            lens = ((int(m.group(2)), int(m.group(3))) if m.group(2)
+                    else None)
+            shape = ((int(m.group(4)), int(m.group(5))) if m.group(4)
+                     else None)
+            return dataflow.audit_inkernel_op(spec, opt_level, op=op,
+                                              lens=lens, shape=shape)
+    return ChainVerdict(op, opt_level, "unaudited", cause="unknown-kernel",
+                        detail="no registry spec or builder for this row")
 
 
 def audit_target(op: str, opt_level: str, *, cache: Any = None,
@@ -666,19 +710,19 @@ def audit_target(op: str, opt_level: str, *, cache: Any = None,
         return audit_chase(ws, steps, line, cache=cache, env=env, op=op)
     m = _KERNEL_RE.match(op)
     if m:
+        from repro.audit import dataflow
+
         lens = ((int(m.group(2)), int(m.group(3))) if m.group(2) else (8, 64))
         shape = ((int(m.group(4)), int(m.group(5))) if m.group(4)
                  else (8, 128))
-        return audit_kernel(m.group(1), lens, shape, op=op)
+        return dataflow.audit_alu_kernel(m.group(1), opt_level, op=op,
+                                         lens=lens, tile=shape)
     if op.startswith(("serving.", "slo.")):
         return ChainVerdict(op, opt_level, "unaudited", cause="consumer-row",
                             detail="predicted-vs-measured consumer record; "
                                    "integrity rides on the rows it prices")
     if op.startswith("inkernel."):
-        return ChainVerdict(op, opt_level, "unaudited",
-                            cause="pallas-fori-loop",
-                            detail="in-kernel fori_loop chain; covered by "
-                                   "the dispatch-level twin's audit")
+        return _audit_pallas_row(op, opt_level, registry)
     specs = list(registry) if registry is not None else default_registry()
     spec = next((s for s in specs if s.name == op), None)
     if spec is not None:

@@ -1,0 +1,621 @@
+"""Dataflow certificates for Pallas kernels: look *inside* the custom call.
+
+Every other auditor in ``repro.audit`` stops at the custom-call boundary:
+the compiled HLO shows one opaque ``custom-call`` and the chain audit can
+only answer ``opaque: custom-call``. But the artifact Pallas lowers — the
+kernel's closed jaxpr — is sitting right there in the traced program, and
+it is exactly the def-use graph the paper's validity argument needs. This
+module traces a kernel builder with :func:`jax.make_jaxpr`, finds each
+``pallas_call`` equation, and derives three certificates from the kernel
+jaxpr + grid mapping:
+
+**serialization** (:class:`ChainCert`)
+    The measured carry really is one dependent chain: every countable op
+    that depends on the carry lies on a single def-use path from the
+    carry-in to the carry-out (scan-carried chains) or from the input refs
+    to the stored value (unrolled chains). A parallel shortcut — two
+    independent sub-chains recombined — shows up as ``count > depth`` and
+    is rejected, as is a body that never reads the carry. Ref-mediated
+    dependence (DMA into a scratch ref that is then read) is tracked by
+    propagating depth through written refs, so the HBM pointer chase's
+    ``dma_start -> dma_wait -> get`` step counts as a dependent load.
+
+**residency** (:class:`RefCert`)
+    Each operand/output ref's block ``memory_space`` (VMEM by default,
+    ANY for HBM-streamed refs) read from the grid mapping — the PR 4
+    VMEM-vs-ANY contract, now checked for every kernel from its lowering
+    artifact instead of trusted from ``chase_in_specs``.
+
+**signature** (:attr:`KernelCert.ops` + :attr:`KernelCert.hbm_bytes`)
+    The per-invocation op multiset (scan-trip- and grid-weighted, mapped
+    through :data:`~repro.audit.chain_check.PRIM_TO_HLO`) and the HBM
+    traffic implied by the block mappings (distinct blocks per ref, found
+    by evaluating each index map over the grid, x block bytes). Two
+    signatures at two chain lengths give the *unit* signature — the exact
+    denominator :meth:`Timer.slope` divides by — via the linearity check
+    in :func:`audit_fused`.
+
+Chain-family audits (:func:`audit_inkernel_op`, :func:`audit_inkernel_mem`,
+:func:`audit_alu_kernel`) certify at two lengths, exactly mirroring the
+two-length slope measurement; fused kernels (:func:`audit_fused`) certify
+signature linearity instead, since their "length" is a workload size, not
+a carry chain. Successful verdicts carry the new ``audited`` status:
+stronger than ``ok`` (the artifact was opened, not just matched) and
+round-tripping through record notes as ``audit=audited``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import math
+from collections import Counter
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import core as jax_core
+
+from repro.audit.chain_check import PLUMBING_OPS, PRIM_TO_HLO, ChainVerdict
+
+# ---------------------------------------------------------------- op classes
+# jax primitives that move data through refs/memory; never counted as
+# arithmetic but counted as loads when they sit on the dependent path
+MEMORY_PRIMS = frozenset({
+    "get", "swap", "masked_load", "masked_swap", "load", "store",
+    "dma_start", "dma_wait", "copy", "addupdate", "broadcast_to",
+})
+
+# shape/index plumbing and grid bookkeeping: zero-cost in the certificate
+STRUCTURAL_PRIMS = frozenset({
+    "broadcast_in_dim", "squeeze", "slice", "dynamic_slice",
+    "dynamic_update_slice", "reshape", "transpose", "concatenate", "pad",
+    "iota", "program_id", "num_programs", "rev", "stop_gradient",
+    "reduce_precision", "expand_dims",
+})
+
+# primitives that appear inside fused kernels but not in PRIM_TO_HLO (the
+# instruction-table mapping only covers registry ops); mapped here so the
+# signature multiset stays in HLO vocabulary
+EXTRA_PRIM_TO_HLO: dict[str, tuple[str, ...]] = {
+    "dot_general": ("dot",),
+    "reduce_sum": ("reduce",), "reduce_max": ("reduce",),
+    "reduce_min": ("reduce",), "reduce_and": ("reduce",),
+    "reduce_or": ("reduce",), "argmax": ("reduce",), "argmin": ("reduce",),
+    "cumsum": ("reduce",), "cumlogsumexp": ("reduce",),
+    "log1p": ("log-plus-one",), "expm1": ("exponential-minus-one",),
+    "erf": ("erf",), "erfc": ("erfc",), "atan2": ("atan2",),
+    "pow": ("power",), "nextafter": ("next-after",),
+}
+
+
+def _hlo_ops(prim: str) -> tuple[str, ...]:
+    """HLO opcodes a countable primitive lowers to ('' family-unknown ->
+    kept under ``prim:<name>`` so nothing silently vanishes)."""
+    if prim in PRIM_TO_HLO:
+        return tuple(o for o in PRIM_TO_HLO[prim] if o not in PLUMBING_OPS)
+    if prim in EXTRA_PRIM_TO_HLO:
+        return EXTRA_PRIM_TO_HLO[prim]
+    return (f"prim:{prim}",)
+
+
+def _weight(prim: str) -> int:
+    """Countable-op weight of one primitive application (0 = plumbing)."""
+    if prim in MEMORY_PRIMS or prim in STRUCTURAL_PRIMS:
+        return 0
+    return len(_hlo_ops(prim))
+
+
+def _is_ref(v: Any) -> bool:
+    aval = getattr(v, "aval", None)
+    return aval is not None and "Ref" in type(aval).__name__
+
+
+def _as_jaxpr(v: Any):
+    """Unwrap a Jaxpr/ClosedJaxpr param value, else None."""
+    inner = getattr(v, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    if hasattr(v, "eqns") and hasattr(v, "invars"):
+        return v
+    return None
+
+
+class DataflowError(ValueError):
+    """A builder did not trace to exactly one auditable pallas_call."""
+
+
+# -------------------------------------------------------------- certificates
+@dataclasses.dataclass(frozen=True)
+class RefCert:
+    """Residency + traffic certificate for one kernel ref."""
+    index: int
+    kind: str                 # "in" | "out"
+    space: str                # "vmem" | "any"
+    block_shape: tuple[int, ...]
+    block_bytes: int
+    distinct_blocks: int
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.block_bytes * self.distinct_blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainCert:
+    """Serialization certificate for the measured dependence chain."""
+    kind: str                 # "scan" | "straightline" | "none"
+    serialized: bool
+    length: int               # scan trip count / straightline path depth
+    depth: int                # countable ops on the carry path per iteration
+    loads: int                # memory ops on the carry path per iteration
+    body_ops: Counter         # per-iteration countable multiset on the path
+    cause: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCert:
+    """Full dataflow certificate for one pallas_call."""
+    name: str
+    grid: tuple[int, ...]
+    ops: Counter              # per-invocation HLO-mapped countable multiset
+    mem_ops: Counter          # per-invocation memory-primitive multiset
+    refs: tuple[RefCert, ...]
+    chain: ChainCert
+
+    @property
+    def hbm_bytes(self) -> int:
+        return sum(r.hbm_bytes for r in self.refs)
+
+    def signature(self) -> str:
+        """Canonical one-line signature: sorted op multiset + HBM bytes."""
+        ops = " ".join(f"{k}={v}" for k, v in sorted(self.ops.items()))
+        return f"{ops or 'none'} bytes={self.hbm_bytes}"
+
+
+# ------------------------------------------------------- primitive counting
+def _count_ops(jaxpr, weight: int, ops: Counter, mem: Counter) -> None:
+    """Weighted recursive op count: scan bodies x trip count, cond branches
+    by elementwise max (the taken work branch), calls inlined."""
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "scan":
+            body = _as_jaxpr(eqn.params["jaxpr"])
+            _count_ops(body, weight * int(eqn.params["length"]), ops, mem)
+        elif prim == "cond":
+            best_ops: Counter = Counter()
+            best_mem: Counter = Counter()
+            for br in eqn.params["branches"]:
+                b_ops: Counter = Counter()
+                b_mem: Counter = Counter()
+                _count_ops(_as_jaxpr(br), 1, b_ops, b_mem)
+                for k in set(best_ops) | set(b_ops):
+                    best_ops[k] = max(best_ops[k], b_ops[k])
+                for k in set(best_mem) | set(b_mem):
+                    best_mem[k] = max(best_mem[k], b_mem[k])
+            for k, v in best_ops.items():
+                ops[k] += weight * v
+            for k, v in best_mem.items():
+                mem[k] += weight * v
+        elif prim == "while":
+            _count_ops(_as_jaxpr(eqn.params["body_jaxpr"]), weight, ops, mem)
+        else:
+            sub = None
+            for key in ("jaxpr", "call_jaxpr"):
+                if key in eqn.params:
+                    sub = _as_jaxpr(eqn.params[key])
+                    break
+            if sub is not None:
+                _count_ops(sub, weight, ops, mem)
+            elif prim in MEMORY_PRIMS:
+                mem[prim] += weight
+            elif _weight(prim):
+                for hlo in _hlo_ops(prim):
+                    ops[hlo] += weight
+            # structural / plumbing: dropped
+
+
+# ------------------------------------------------------ dependence analysis
+def _trace_path(eqns, seeds: dict[Any, int], ref_seeds: Iterable[Any] = ()
+                ) -> tuple[dict[Any, int], int, int, Counter]:
+    """Walk ``eqns`` in program order propagating dependence depth from
+    ``seeds`` (var -> starting depth). Returns (depth-by-var, countable op
+    count on the dependent subgraph, dependent memory-op count, countable
+    multiset). Ref-typed vars written by a dependent eqn carry the depth to
+    later reads (DMA-through-scratch serialization)."""
+    depth = dict(seeds)
+    ref_depth: dict[Any, int] = {r: 0 for r in ref_seeds}
+    count = 0
+    loads = 0
+    ops: Counter = Counter()
+    for eqn in eqns:
+        prim = eqn.primitive.name
+        ins = [v for v in eqn.invars
+               if not isinstance(v, jax_core.Literal)]
+        dep = [depth[v] for v in ins if v in depth]
+        dep += [ref_depth[v] for v in ins if v in ref_depth]
+        if not dep:
+            continue
+        w = _weight(prim)
+        d = max(dep) + w
+        count += w
+        if w:
+            for hlo in _hlo_ops(prim):
+                ops[hlo] += 1
+        if prim in MEMORY_PRIMS:
+            loads += 1
+        for v in ins:
+            if _is_ref(v):
+                ref_depth[v] = max(ref_depth.get(v, 0), d)
+        for ov in eqn.outvars:
+            depth[ov] = d
+    return depth, count, loads, ops
+
+
+def _is_counter_carry(invar, outvar, eqns) -> bool:
+    """True for the fori_loop induction variable: a scalar int carry whose
+    only dependent op is one literal add."""
+    aval = getattr(invar, "aval", None)
+    if aval is None or getattr(aval, "shape", None) not in ((), None):
+        return False
+    if not jnp.issubdtype(getattr(aval, "dtype", jnp.float32), jnp.integer):
+        return False
+    depth, count, loads, ops = _trace_path(eqns, {invar: 0})
+    return (count == 1 and loads == 0 and ops == Counter({"add": 1})
+            and depth.get(outvar) == 1)
+
+
+def _scan_chain_cert(eqn) -> ChainCert:
+    """Serialization certificate for a scan-carried chain: exactly one
+    measured (non-induction) carry, dependent in -> out each iteration,
+    every dependent countable op on one serial path."""
+    body = _as_jaxpr(eqn.params["jaxpr"])
+    length = int(eqn.params["length"])
+    num_consts = int(eqn.params["num_consts"])
+    num_carry = int(eqn.params["num_carry"])
+    carries = [(body.invars[num_consts + i], body.outvars[i])
+               for i in range(num_carry)]
+    measured = [(iv, ov) for iv, ov in carries
+                if not _is_counter_carry(iv, ov, body.eqns)]
+    if not measured:
+        return ChainCert("scan", False, length, 0, 0, Counter(),
+                         cause="no-measured-carry")
+    if len(measured) > 1:
+        return ChainCert("scan", False, length, 0, 0, Counter(),
+                         cause="multiple-carries")
+    invar, outvar = measured[0]
+    depth, count, loads, ops = _trace_path(body.eqns, {invar: 0})
+    if outvar not in depth:
+        return ChainCert("scan", False, length, count, loads, ops,
+                         cause="no-dependence")
+    if count != depth[outvar]:
+        return ChainCert("scan", False, length, count, loads, ops,
+                         cause="parallel-shortcut")
+    return ChainCert("scan", True, length, count, loads, ops)
+
+
+def _straightline_chain_cert(jaxpr, input_refs) -> ChainCert:
+    """Serialization certificate for an unrolled chain: all countable ops
+    that depend on the kernel inputs form one serial path."""
+    depth, count, loads, ops = _trace_path(
+        jaxpr.eqns, {}, ref_seeds=input_refs)
+    if not depth:
+        return ChainCert("straightline", False, 0, 0, loads, ops,
+                         cause="no-dependence")
+    longest = max(depth.values())
+    if count != longest:
+        return ChainCert("straightline", False, longest, count, loads, ops,
+                         cause="parallel-shortcut")
+    return ChainCert("straightline", True, longest, count, loads, ops)
+
+
+# -------------------------------------------------------- block-map traffic
+def _block_dims(block_shape) -> tuple[int, ...]:
+    return tuple(int(d) if isinstance(d, int) else 1 for d in block_shape)
+
+
+def _distinct_blocks(bm, grid: tuple[int, ...]) -> int:
+    """How many distinct blocks the ref's index map selects over the grid —
+    the HBM-traffic multiplier (a broadcast block map revisits one block)."""
+    total = max(int(math.prod(grid)), 1)
+    cj = getattr(bm, "index_map_jaxpr", None)
+    if cj is None or total > 4096 or len(cj.jaxpr.invars) != len(grid):
+        return total
+    seen = set()
+    for idx in itertools.product(*(range(max(g, 1)) for g in grid)):
+        out = jax_core.eval_jaxpr(cj.jaxpr, cj.consts, *idx)
+        seen.add(tuple(int(x) for x in out))
+    return len(seen)
+
+
+def _ref_certs(grid_mapping) -> tuple[RefCert, ...]:
+    grid = tuple(int(g) for g in grid_mapping.grid)
+    n_in = int(grid_mapping.num_inputs)
+    certs = []
+    for i, bm in enumerate(grid_mapping.block_mappings):
+        space = "any" if "any" in str(
+            getattr(bm.block_aval, "memory_space", "")).lower() else "vmem"
+        dims = _block_dims(bm.block_shape)
+        itemsize = jnp.dtype(bm.array_shape_dtype.dtype).itemsize
+        certs.append(RefCert(
+            index=i, kind="in" if i < n_in else "out", space=space,
+            block_shape=dims,
+            block_bytes=int(math.prod(dims)) * int(itemsize),
+            distinct_blocks=_distinct_blocks(bm, grid)))
+    return tuple(certs)
+
+
+# ------------------------------------------------------------ kernel certs
+def _find_pallas_eqns(jaxpr, out: list) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            out.append(eqn)
+            continue
+        for key in ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr"):
+            if key in eqn.params:
+                sub = _as_jaxpr(eqn.params[key])
+                if sub is not None:
+                    _find_pallas_eqns(sub, out)
+        if eqn.primitive.name == "cond":
+            for br in eqn.params.get("branches", ()):
+                _find_pallas_eqns(_as_jaxpr(br), out)
+
+
+def _cert_from_eqn(eqn) -> KernelCert:
+    kernel = _as_jaxpr(eqn.params["jaxpr"])
+    gm = eqn.params["grid_mapping"]
+    grid = tuple(int(g) for g in gm.grid) or (1,)
+    name = getattr(eqn.params.get("name_and_src_info"), "name", "kernel")
+
+    refs = _ref_certs(gm)
+    grid_size = max(int(math.prod(grid)), 1)
+    ops: Counter = Counter()
+    mem: Counter = Counter()
+    _count_ops(kernel, grid_size, ops, mem)
+
+    scans = [e for e in kernel.eqns if e.primitive.name == "scan"]
+    if len(scans) == 1:
+        chain = _scan_chain_cert(scans[0])
+    elif scans:
+        chain = ChainCert("scan", False, 0, 0, 0, Counter(),
+                          cause="multiple-loops")
+    else:
+        n_idx = int(getattr(gm, "num_index_operands", 0))
+        n_in = int(gm.num_inputs)
+        input_refs = [v for v in kernel.invars[n_idx:n_idx + n_in]]
+        chain = _straightline_chain_cert(kernel, input_refs)
+    return KernelCert(name=name, grid=grid, ops=ops, mem_ops=mem,
+                      refs=refs, chain=chain)
+
+
+def kernel_certs(fn: Callable, *args) -> tuple[KernelCert, ...]:
+    """Trace ``fn(*args)`` and certify every pallas_call it contains."""
+    closed = jax.make_jaxpr(fn)(*args)
+    eqns: list = []
+    _find_pallas_eqns(closed.jaxpr, eqns)
+    return tuple(_cert_from_eqn(e) for e in eqns)
+
+
+def kernel_cert(fn: Callable, *args) -> KernelCert:
+    """Certify the single pallas_call of a kernel builder."""
+    certs = kernel_certs(fn, *args)
+    if len(certs) != 1:
+        raise DataflowError(
+            f"expected exactly one pallas_call, traced {len(certs)}")
+    return certs[0]
+
+
+# ----------------------------------------------------------- verdict helpers
+def _residency_cause(cert: KernelCert,
+                     expect: dict[int, str] | None = None) -> str:
+    """'' if every ref sits in its declared space (vmem unless overridden
+    per-index by ``expect``)."""
+    expect = expect or {}
+    for r in cert.refs:
+        want = expect.get(r.index, "vmem")
+        if r.space != want:
+            return f"residency-mismatch(ref{r.index}:{r.space}!={want})"
+    return ""
+
+
+def _audited(op: str, opt_level: str, detail: str) -> ChainVerdict:
+    return ChainVerdict(op, opt_level, "audited", detail=detail)
+
+
+def _transformed(op: str, opt_level: str, cause: str,
+                 detail: str = "") -> ChainVerdict:
+    return ChainVerdict(op, opt_level, "transformed", cause=cause,
+                        detail=detail)
+
+
+def _chain_pair_verdict(op: str, opt_level: str,
+                        certs: Sequence[KernelCert],
+                        lens: Sequence[int], *,
+                        expect_spaces: dict[int, str] | None = None,
+                        per_iter: bool, min_loads: int = 0) -> ChainVerdict:
+    """The uniform two-length chain certificate: both lens serialized, both
+    residency-clean, and the length delta exactly the slope's denominator.
+
+    ``per_iter=True`` (scan chains): trip counts must equal the requested
+    lens and the per-iteration path multiset must match between lens.
+    ``per_iter=False`` (unrolled chains): the total path depth must scale
+    as ``n x unit`` for an integer unit."""
+    (n1, n2), (c1, c2) = tuple(lens), tuple(certs)
+    for n, c in ((n1, c1), (n2, c2)):
+        if not c.chain.serialized:
+            return _transformed(op, opt_level, c.chain.cause or "not-serial",
+                                f"len={n}")
+        cause = _residency_cause(c, expect_spaces)
+        if cause:
+            return _transformed(op, opt_level, cause, f"len={n}")
+        if c.chain.loads < min_loads:
+            return _transformed(
+                op, opt_level, "missing-dependent-load",
+                f"len={n} loads={c.chain.loads}<{min_loads}")
+    if per_iter:
+        if (c1.chain.length, c2.chain.length) != (n1, n2):
+            return _transformed(
+                op, opt_level, "length-mismatch",
+                f"trips={c1.chain.length},{c2.chain.length} want={n1},{n2}")
+        if c1.chain.body_ops != c2.chain.body_ops:
+            return _transformed(op, opt_level, "body-mismatch",
+                                f"{dict(c1.chain.body_ops)} != "
+                                f"{dict(c2.chain.body_ops)}")
+        unit = dict(c1.chain.body_ops)
+        detail = (f"trips={n1},{n2} depth/iter={c1.chain.depth} "
+                  f"loads/iter={c1.chain.loads} step={unit or 'mem-only'}")
+    else:
+        d1, d2 = c1.chain.length, c2.chain.length
+        if (d2 - d1) % (n2 - n1) or d1 * n2 != d2 * n1:
+            return _transformed(op, opt_level, "length-mismatch",
+                                f"depths={d1},{d2} lens={n1},{n2}")
+        detail = f"depths={d1},{d2} unit={(d2 - d1) // (n2 - n1)}"
+    return _audited(op, opt_level, detail)
+
+
+# ------------------------------------------------------- chain-family audits
+def audit_inkernel_op(spec, opt_level: str, *, op: str | None = None,
+                      lens: Sequence[int] | None = None,
+                      shape: tuple[int, int] | None = None) -> ChainVerdict:
+    """Certify an ``inkernel.<spec>`` fori_loop chain from its jaxpr."""
+    from repro.inkernel.factory import build_chain, supported, tiles
+    from repro.inkernel.measure import INKERNEL_LENS
+
+    op = op or f"inkernel.{spec.name}"
+    if not supported(spec):
+        return ChainVerdict(op, opt_level, "unaudited", cause="x64-dispatch")
+    lens = tuple(lens or INKERNEL_LENS)
+    carry, operands = tiles(spec, shape)
+    certs = []
+    for n in lens:
+        fn = build_chain(spec, n, interpret=True)
+        certs.append(kernel_cert(fn, carry, *operands))
+    return _chain_pair_verdict(op, opt_level, certs, lens, per_iter=True)
+
+
+def audit_inkernel_mem(ws_bytes: int, opt_level: str, *,
+                       op: str | None = None, space: str | None = None,
+                       line_bytes: int = 64,
+                       lens: Sequence[int] | None = None) -> ChainVerdict:
+    """Certify an ``inkernel.mem.<bytes>`` pointer chase: a serialized
+    dependent load per step, ring resident in its selected space."""
+    from repro.core.membench import build_ring
+    from repro.inkernel.measure import CHASE_LENS
+    from repro.kernels.chase import chase, select_memory_space
+
+    op = op or f"inkernel.mem.{ws_bytes}"
+    space = space or select_memory_space(ws_bytes)
+    lens = tuple(lens or CHASE_LENS)
+    ring, start = build_ring(ws_bytes, line_bytes)
+    certs = []
+    for n in lens:
+        fn = functools.partial(chase, steps=int(n), memory_space=space,
+                               interpret=True)
+        certs.append(kernel_cert(fn, ring, start))
+    # ref0 is the ring (the working set under test); everything else VMEM
+    expect = {0: space}
+    return _chain_pair_verdict(op, opt_level, certs, lens,
+                               expect_spaces=expect, per_iter=True,
+                               min_loads=1)
+
+
+def audit_alu_kernel(alu_op: str, opt_level: str, *, op: str | None = None,
+                     lens: Sequence[int] = (8, 64),
+                     tile: tuple[int, int] = (8, 128)) -> ChainVerdict:
+    """Certify a ``kernel.alu_chain.<op>`` unrolled chain: the n-times
+    unrolled body is one straight dependent path of ``n x unit`` ops."""
+    from repro.kernels.alu_chain import alu_chain
+
+    op = op or f"kernel.alu_chain.{alu_op}"
+    x = jnp.full(tile, 1.5, jnp.float32)
+    a = jnp.full(tile, 0.5, jnp.float32)
+    certs = []
+    try:
+        for n in lens:
+            fn = functools.partial(alu_chain, n=int(n), op=alu_op,
+                                   interpret=True)
+            certs.append(kernel_cert(fn, x, a))
+    except ValueError:
+        return ChainVerdict(op, opt_level, "unaudited",
+                            cause="unknown-kernel-op")
+    return _chain_pair_verdict(op, opt_level, certs, lens, per_iter=False)
+
+
+# ------------------------------------------------------------- fused kernels
+def audit_fused(name: str, opt_level: str = "O3", *, op: str | None = None,
+                lens: Sequence[int] | None = None) -> ChainVerdict:
+    """Certify an ``inkernel.fused.<name>`` row: residency-clean at both
+    workload sizes and signature *linear* in the size — the exact property
+    ``Timer.slope`` needs to net the launch/DMA overhead out of a fused
+    kernel the way it does for a chain."""
+    from repro.inkernel.fused import FUSED_LENS, build_fused
+
+    op = op or f"inkernel.fused.{name}"
+    lens = tuple(lens or FUSED_LENS)
+    try:
+        unit = fused_unit(name, lens)
+    except ValueError:
+        return ChainVerdict(op, opt_level, "unaudited",
+                            cause="unknown-kernel-op")
+    except DataflowError as e:
+        return ChainVerdict(op, opt_level, "opaque", cause="untraceable",
+                            detail=str(e))
+    except _NonlinearSignature as e:
+        return _transformed(op, opt_level, e.cause, e.detail)
+    for n in lens:
+        fn, args = build_fused(name, n, interpret=True)
+        cause = _residency_cause(kernel_cert(fn, *args))
+        if cause:
+            return _transformed(op, opt_level, cause, f"len={n}")
+    ops = " ".join(f"{k}={v}" for k, v in sorted(unit["ops"].items()))
+    return _audited(op, opt_level,
+                    f"unit_bytes={unit['bytes']} unit_ops=[{ops}]")
+
+
+class _NonlinearSignature(Exception):
+    def __init__(self, cause: str, detail: str):
+        super().__init__(f"{cause}: {detail}")
+        self.cause, self.detail = cause, detail
+
+
+@functools.lru_cache(maxsize=None)
+def fused_unit(name: str, lens: tuple[int, int]) -> dict:
+    """Unit signature of a fused kernel: the per-workload-unit op multiset
+    and HBM bytes, from the signature delta between two workload sizes.
+    Raises :class:`_NonlinearSignature` if the delta is not divisible —
+    i.e. the kernel does not scale the way the slope assumes."""
+    from repro.inkernel.fused import build_fused
+
+    n1, n2 = lens
+    certs = []
+    for n in lens:
+        fn, args = build_fused(name, n, interpret=True)
+        certs.append(kernel_cert(fn, *args))
+    c1, c2 = certs
+    dn = n2 - n1
+    delta = Counter(c2.ops)
+    delta.subtract(c1.ops)
+    unit_ops: dict[str, int] = {}
+    for k, v in delta.items():
+        if v < 0 or v % dn:
+            raise _NonlinearSignature(
+                "nonlinear-signature", f"{k}: delta={v} over dn={dn}")
+        if v:
+            unit_ops[k] = v // dn
+    dbytes = c2.hbm_bytes - c1.hbm_bytes
+    if dbytes <= 0 or dbytes % dn:
+        raise _NonlinearSignature(
+            "nonlinear-traffic", f"bytes delta={dbytes} over dn={dn}")
+    return {"ops": unit_ops, "bytes": dbytes // dn,
+            "grid": c2.grid, "total_bytes": {n1: c1.hbm_bytes,
+                                             n2: c2.hbm_bytes}}
+
+
+def fused_registry(lens: tuple[int, int] | None = None) -> dict[str, dict]:
+    """name -> unit signature for every in-repo fused kernel. The dataflow
+    side of ``CUSTOM_CALL_TARGETS``: a custom-call target resolves to a
+    priced row only if its kernel certifies here."""
+    from repro.inkernel.fused import FUSED_KERNELS, FUSED_LENS
+
+    lens = tuple(lens or FUSED_LENS)
+    return {name: fused_unit(name, lens) for name in FUSED_KERNELS}

@@ -12,7 +12,14 @@ pipeline honest, and all three are checkable without timing anything:
 * **zoo coverage** — every opcode appearing in the model zoo's optimized HLO
   must be priced (``HLO_TO_TABLE``), structural (``STRUCTURAL_OPS``), or on
   the explicit :data:`ZOO_ALLOWLIST` (else a new model silently inflates the
-  estimator's default-cost bucket).
+  estimator's default-cost bucket). Custom-calls are resolved per call site
+  through ``hlo_analysis.CUSTOM_CALL_TARGETS``: a target mapped to a
+  dataflow-certified fused kernel passes, a documented XLA library target
+  (:data:`KNOWN_LIBRARY_CALLS`) passes, an unknown target fails — never
+  the old blanket "custom-call is exempt" escape.
+
+``lint_dataflow`` certifies every in-repo Pallas kernel family through
+:mod:`repro.audit.dataflow` (serialization / residency / signature).
 
 ``lint_registry_lowering`` additionally compiles one short chain per spec and
 asserts the expected target opcodes actually appear — the cheap
@@ -60,8 +67,21 @@ ZOO_ALLOWLIST: dict[str, str] = {
     # RNG: counter-based generator, priced as its component ALU ops
     "rng-bit-generator": "counter-based RNG; components are mapped ALU ops",
     "rng": "legacy RNG op; components are mapped ALU ops",
-    # NOTE: custom-call is deliberately NOT allowlisted — it must keep
-    # counting against estimator coverage (see STRUCTURAL_OPS rationale).
+    # NOTE: custom-call is deliberately NOT allowlistable — each call site
+    # must resolve through hlo_analysis.CUSTOM_CALL_TARGETS to a measured
+    # fused-kernel row, or be a KNOWN_LIBRARY_CALLS target, or lint_zoo
+    # reports it per target.
+}
+
+# Custom-call targets XLA itself emits when lowering builtin ops on some
+# backends — library code, not in-repo Pallas kernels, so there is no fused
+# row to price them from and no jaxpr to certify. The lint accepts exactly
+# these targets (reason required per entry); the estimator still reports
+# every one as ``custom-call:<target>`` unpriced, so they keep counting
+# against coverage. An unlisted, unresolved target remains a lint failure.
+KNOWN_LIBRARY_CALLS: dict[str, str] = {
+    "TopK": "XLA CPU lowering of lax.top_k (MoE router); comparator-network "
+            "library code with no serializable dependence chain to measure",
 }
 
 
@@ -208,7 +228,9 @@ def lint_zoo(archs: Iterable[str] | None = None) -> list[LintFinding]:
     on the host backend (slow: seconds per arch) but times nothing."""
     from repro.configs.registry import all_arch_ids
     from repro.core.hlo_analysis import (HLO_TO_TABLE, STRUCTURAL_OPS,
-                                         op_histogram)
+                                         ModuleCost, op_histogram,
+                                         resolve_custom_call)
+    from repro.inkernel.fused import FUSED_KERNELS
 
     findings = []
     for arch in (archs if archs is not None else all_arch_ids()):
@@ -228,16 +250,74 @@ def lint_zoo(archs: Iterable[str] | None = None) -> list[LintFinding]:
                 "zoo-coverage", arch,
                 f"opcode '{opc}' is neither priced (HLO_TO_TABLE), "
                 f"structural, nor allowlisted"))
+        # custom-call is never allowlistable wholesale: each call site must
+        # resolve through CUSTOM_CALL_TARGETS to a measured fused-kernel row
+        # (the dataflow-certified registry) or be a documented XLA library
+        # target (KNOWN_LIBRARY_CALLS) — anything else fails the lint.
+        seen_targets: set[str] = set()
+        for target, _b, execs, rest in ModuleCost(text).dynamic_custom_calls():
+            if execs <= 0:
+                continue
+            name = resolve_custom_call(target, rest)
+            if name in FUSED_KERNELS or target in KNOWN_LIBRARY_CALLS:
+                continue
+            if target in seen_targets:
+                continue
+            seen_targets.add(target)
+            findings.append(LintFinding(
+                "zoo-coverage", arch,
+                f"custom-call target '{target or '?'}' resolves to neither "
+                f"a measured fused-kernel row (CUSTOM_CALL_TARGETS) nor a "
+                f"documented library call (KNOWN_LIBRARY_CALLS) — the "
+                f"estimator would default-price an opaque kernel"))
+    return findings
+
+
+def lint_dataflow() -> list[LintFinding]:
+    """Open every in-repo Pallas kernel family's jaxpr and certify it.
+
+    The compile-free (interpret-mode tracing only) closure property behind
+    the ``audited`` verdicts: the four fused production kernels, the five
+    unrolled ALU chains, one representative fori-loop op chain, and both
+    chase residencies must all certify serialization + residency +
+    signature through :mod:`repro.audit.dataflow` — no family-specific
+    escape hatches. A kernel edit that parallelizes a chain or moves a ref
+    out of its declared space fails here before any number is measured.
+    """
+    from repro.audit import dataflow
+    from repro.core.chains import default_registry
+    from repro.inkernel.fused import FUSED_KERNELS
+
+    findings = []
+
+    def check(v) -> None:
+        if not v.ok:
+            findings.append(LintFinding(
+                "dataflow", f"{v.op}@{v.opt_level}",
+                f"{v.status}:{v.cause}"
+                + (f" — {v.detail}" if v.detail else "")))
+
+    for name in FUSED_KERNELS:
+        check(dataflow.audit_fused(name))
+    for alu_op in ("fma", "add", "mul", "rsqrt", "exp"):
+        check(dataflow.audit_alu_kernel(alu_op, "O3"))
+    spec = next(s for s in default_registry() if s.name == "add.float32")
+    check(dataflow.audit_inkernel_op(spec, "O3"))
+    check(dataflow.audit_inkernel_mem(8192, "O3", space="vmem"))
+    check(dataflow.audit_inkernel_mem(8192, "O3", space="any"))
     return findings
 
 
 def run_lints(lowering: bool = False, zoo: bool = False,
-              archs: Iterable[str] | None = None) -> list[LintFinding]:
-    """All static lints. The trace-only set always runs; ``lowering`` and
-    ``zoo`` opt into the compile-needing (still device-free) sets."""
+              archs: Iterable[str] | None = None,
+              dataflow: bool = False) -> list[LintFinding]:
+    """All static lints. The trace-only set always runs; ``lowering``,
+    ``zoo`` and ``dataflow`` opt into the slower (still device-free) sets."""
     findings = lint_table_mapping() + lint_guard_identity()
     if lowering:
         findings += lint_registry_lowering()
     if zoo:
         findings += lint_zoo(archs)
+    if dataflow:
+        findings += lint_dataflow()
     return findings

@@ -449,6 +449,28 @@ class ModuleCost:
                 out[op.opcode] = out.get(op.opcode, 0.0) + f * e
         return out
 
+    def dynamic_custom_calls(self) -> list[tuple[str, float, float, str]]:
+        """Every custom-call line, executions-weighted.
+
+        Returns ``(target, hbm_bytes, executions, rest)`` per call site:
+        the ``custom_call_target`` string, the call's operand+result bytes
+        (its HBM footprint — the quantity the fused-row pricing scales by),
+        the trip-count-weighted execution count, and the raw op tail so
+        :func:`resolve_custom_call` can scan lowering payloads (Mosaic
+        embeds the kernel name in the ``tpu_custom_call`` config, not the
+        target)."""
+        out = []
+        for comp, op, e, _ in self._walk_dynamic():
+            if op.opcode != "custom-call":
+                continue
+            m = _CC_TARGET_RE.search(op.rest)
+            target = m.group(1) if m else ""
+            _, rbytes = _shape_info(op.result_type)
+            ob = sum(_shape_info(comp.shapes.get(o, ""))[1]
+                     for o in op.operands)
+            out.append((target, float(ob + rbytes), e, op.rest))
+        return out
+
 
 def static_cost(hlo_text: str) -> StaticCost:
     return ModuleCost(hlo_text).total()
@@ -485,6 +507,43 @@ HLO_TO_TABLE = {
     "popcnt": "popc", "count-leading-zeros": "clz", "remainder": "rem.s",
     "power": "ex2", "logistic": "tanh",
 }
+
+# Custom-call targets the characterization pipeline has measured rows for:
+# target (or lowering-payload substring) -> fused-kernel name, i.e. the stem
+# of an ``inkernel.fused.<name>`` LatencyDB row whose two-size slope priced
+# one workload unit of that kernel (see repro.inkernel.fused.FUSED_KERNELS
+# and repro.audit.dataflow.fused_registry — the dataflow certificates carry
+# each row's unit-bytes denominator). The estimator prices a resolved call
+# as ``executions * call_bytes / unit_bytes * row_ns``; unresolved targets
+# stay unpriced and count against coverage (HLO_TO_TABLE's veil rule).
+CUSTOM_CALL_TARGETS = {
+    "flash_attention": "flash_attention",
+    "flash_decode": "flash_decode",
+    "mamba_scan": "mamba_scan",
+    "rmsnorm": "rmsnorm",
+}
+
+_CC_TARGET_RE = re.compile(r'custom_call_target="([^"]+)"')
+
+
+def resolve_custom_call(target: str, rest: str = "") -> str | None:
+    """Map one custom-call site to a measured fused-kernel row stem.
+
+    Exact target match first (GPU lowerings name the kernel directly), then
+    a registered-name substring scan over ``target`` + ``rest`` — TPU Pallas
+    kernels all share the ``tpu_custom_call`` target and carry the kernel
+    name only inside the serialized Mosaic config. Returns ``None`` for
+    unknown targets: those must surface as ``custom-call:<target>`` in
+    ``PricedReport.unpriced_opcodes``, never silently default-priced as a
+    generic opcode."""
+    if target in CUSTOM_CALL_TARGETS:
+        return CUSTOM_CALL_TARGETS[target]
+    hay = target + " " + rest
+    for key, name in CUSTOM_CALL_TARGETS.items():
+        if key in hay:
+            return name
+    return None
+
 
 # Opcodes that are bookkeeping/data-movement, not issued arithmetic: excluded
 # from the estimator's coverage denominator (an unmapped `multiply` lowers

@@ -225,7 +225,11 @@ class HloLatencyEstimator:
       lane-amortized per-element throughput. ``dot``/``convolution`` price
       their FLOPs/2 as fma-equivalents through the same formula. Opcodes with
       no mapped or measured row are priced at ``default_ns`` and reported in
-      ``unpriced_opcodes`` instead of being silently skipped.
+      ``unpriced_opcodes`` instead of being silently skipped. Custom-calls
+      resolving through :data:`hlo_analysis.CUSTOM_CALL_TARGETS` to a
+      measured ``inkernel.fused.<name>`` row are priced by HBM footprint
+      against the row's certified unit bytes; unresolved targets are
+      reported per target as ``custom-call:<target>``.
     * **memory**: the module's rolled-up HBM bytes priced from the measured
       pointer-chase ladder (``inkernel.mem.<N>`` preferred over the host twin
       ``mem.chase.ws<N>``): the rung covering the module's footprint gives
@@ -264,6 +268,34 @@ class HloLatencyEstimator:
             if lat is not None:
                 return lat, True
         return self.default_ns, False
+
+    def _fused_row(self, name: str) -> tuple[float, float] | None:
+        """``(ns_per_unit, unit_bytes)`` of a measured fused-kernel row.
+
+        ``unit_bytes`` — the HBM footprint of one workload unit, certified
+        by the dataflow audit — is the scaling denominator: a zoo-model
+        custom-call moving ``B`` bytes costs ``B / unit_bytes`` row units.
+        Preferred source is the row's own notes (FusedKernelProbe persists
+        ``unit_bytes=N``); older rows fall back to re-deriving the
+        certificate, and rows with neither are unusable for pricing."""
+        recs = self.db.query(op=f"inkernel.fused.{name}",
+                             opt_level=self.opt_level, **self.filters)
+        if not recs:
+            return None
+        rec = sorted(recs, key=lambda r: r.measured_at)[-1]
+        unit_bytes = float(parse_kv_notes(rec.notes).get("unit_bytes", 0.0)
+                           or 0.0)
+        if unit_bytes <= 0:
+            try:
+                from repro.audit.dataflow import fused_unit
+                from repro.inkernel.fused import FUSED_LENS
+
+                unit_bytes = float(fused_unit(name, FUSED_LENS)["bytes"])
+            except Exception:  # noqa: BLE001 - uncertifiable row: no pricing
+                return None
+        if unit_bytes <= 0:
+            return None
+        return rec.latency_ns, unit_bytes
 
     def memory_ladder(self) -> list[MemoryRung]:
         """Measured chase rungs in the DB, ascending by working set.
@@ -325,6 +357,8 @@ class HloLatencyEstimator:
         for (opcode, elems), count in sorted(hist.items()):
             if count <= 0 or opcode in hlo_analysis.STRUCTURAL_OPS:
                 continue
+            if opcode == "custom-call":
+                continue            # priced per call site below (fused rows)
             if opcode in ("dot", "convolution"):
                 matmul_instances += count
                 continue            # priced below from dynamic FLOPs
@@ -346,6 +380,33 @@ class HloLatencyEstimator:
                 unpriced += count
                 unpriced_ops[opcode] = unpriced_ops.get(opcode, 0.0) + count
                 account("unpriced", ns, count, count * elems)
+
+        # Custom-calls: per call site, not per opcode. A site whose target
+        # resolves through CUSTOM_CALL_TARGETS to a measured
+        # ``inkernel.fused.<name>`` row is priced by HBM footprint —
+        # ``executions x call_bytes / unit_bytes x row_ns`` — the two-size
+        # slope already netted launch + DMA out of row_ns, so scaling by the
+        # certified unit bytes is the same per-unit algebra the probe used.
+        # Everything else stays default-priced and is reported per *target*
+        # (``custom-call:<target>``), not lumped under one opaque opcode.
+        for target, cbytes, execs, rest in mc.dynamic_custom_calls():
+            if execs <= 0:
+                continue
+            name = hlo_analysis.resolve_custom_call(target, rest)
+            row = self._fused_row(name) if name else None
+            if row is not None:
+                row_ns, unit_bytes = row
+                ns = execs * (cbytes / unit_bytes) * row_ns
+                compute += ns
+                priced += execs
+                account(f"fused:{name}", ns, execs, 0.0)
+            else:
+                ns = execs * self.default_ns
+                compute += ns
+                unpriced += execs
+                label = f"custom-call:{target or '?'}"
+                unpriced_ops[label] = unpriced_ops.get(label, 0.0) + execs
+                account("unpriced", ns, execs, 0.0)
 
         if matmul_instances:
             dyn_flops = mc.dynamic_flops()

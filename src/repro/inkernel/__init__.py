@@ -15,24 +15,35 @@ dependent instruction *inside* the kernel. This subsystem is the TPU analog:
   carries stay on the dispatch path: TPUs lack native i64/f64 lanes);
 * :func:`measure_chase_full` — the memory-hierarchy rows: the dependent
   pointer chase (``repro.kernels.chase``) at one working-set size, VMEM- or
-  HBM-resident by footprint, under the same slope extraction.
+  HBM-resident by footprint, under the same slope extraction;
+* :func:`measure_fused_full` / :func:`build_fused` — the fused production
+  kernels (flash_attention, flash_decode, mamba_scan, rmsnorm) as two-size
+  workload slopes (``inkernel.fused.<name>`` rows), certified by
+  ``repro.audit.dataflow`` and priced into zoo models by
+  ``core.perfmodel``.
 
 The scheduled front doors are :class:`repro.api.KernelChainProbe` (plan name
-``inkernel``) and :class:`repro.api.MemoryChaseProbe` (plan name
-``memory-inkernel``), which add LatencyDB caching, resume and structured
-failures on top. See docs/inkernel.md and docs/memory.md for the methodology
-mapping to the paper.
+``inkernel``), :class:`repro.api.MemoryChaseProbe` (plan name
+``memory-inkernel``) and :class:`repro.api.FusedKernelProbe` (plan name
+``fused``), which add LatencyDB caching, resume and structured failures on
+top. See docs/inkernel.md and docs/memory.md for the methodology mapping to
+the paper.
 """
 from repro.inkernel.factory import (build_chain, default_tile, supported,
                                     supported_specs, tiles)
+from repro.inkernel.fused import FUSED_KERNELS, FUSED_LENS, build_fused
 from repro.inkernel.measure import (CHASE_LENS, INKERNEL_LENS, PreparedKernel,
-                                    measure_chase_full, measure_inkernel_full,
-                                    prepare_chase, prepare_inkernel,
-                                    run_prepared_chase, run_prepared_inkernel)
+                                    measure_chase_full, measure_fused_full,
+                                    measure_inkernel_full, prepare_chase,
+                                    prepare_fused, prepare_inkernel,
+                                    run_prepared_chase, run_prepared_fused,
+                                    run_prepared_inkernel)
 
 __all__ = [
-    "CHASE_LENS", "INKERNEL_LENS", "PreparedKernel", "build_chain",
-    "default_tile", "measure_chase_full", "measure_inkernel_full",
-    "prepare_chase", "prepare_inkernel", "run_prepared_chase",
-    "run_prepared_inkernel", "supported", "supported_specs", "tiles",
+    "CHASE_LENS", "FUSED_KERNELS", "FUSED_LENS", "INKERNEL_LENS",
+    "PreparedKernel", "build_chain", "build_fused", "default_tile",
+    "measure_chase_full", "measure_fused_full", "measure_inkernel_full",
+    "prepare_chase", "prepare_fused", "prepare_inkernel",
+    "run_prepared_chase", "run_prepared_fused", "run_prepared_inkernel",
+    "supported", "supported_specs", "tiles",
 ]

@@ -1,0 +1,107 @@
+"""Unit-workload builders for the fused-kernel probe rows.
+
+Each in-repo fused Pallas kernel (``kernels/``) gets a parameterized *unit
+workload*: ``build_fused(name, n)`` returns a jit-able callable plus its
+arguments, sized so the kernel executes exactly ``n`` workload units (KV
+blocks for attention, sequence chunks for the SSM scan, row blocks for
+rmsnorm). Two sizes measured with :meth:`Timer.slope` net the launch/DMA
+overhead exactly like the chain probes net theirs — the per-unit latency is
+the slope — and the same two sizes feed the dataflow auditor's signature
+linearity certificate (:func:`repro.audit.dataflow.audit_fused`), which
+derives the per-unit HBM byte count (``unit_bytes``) that the estimator
+scales when pricing a zoo-model custom-call of a different shape.
+
+One builder is the single source of truth for probe, auditor, and registry:
+what is measured is exactly what is certified.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+Array = Any
+
+FUSED_KERNELS = ("flash_attention", "flash_decode", "mamba_scan", "rmsnorm")
+
+# two workload sizes for the slope; larger spans amortize per-unit noise but
+# these run in interpret mode on CPU, so stay small
+FUSED_LENS = (2, 6)
+
+_BLK = 16     # q/k block for the attention kernels (TPU-lane friendly)
+_HEADS = 2    # grouped heads per KV head
+_CHUNK = 8    # mamba chunk (= sequence units)
+_DM = 8       # mamba model dim
+_DN = 4       # mamba state dim
+_ROWS = 8     # rmsnorm block rows
+_COLS = 64    # rmsnorm feature dim
+
+
+def _ramp(shape, lo=0.05, hi=0.95, dtype=jnp.float32) -> Array:
+    """Deterministic well-conditioned values in [lo, hi] (no RNG: builders
+    must be reproducible across probe and auditor call sites)."""
+    n = 1
+    for d in shape:
+        n *= d
+    flat = lo + (hi - lo) * (jnp.arange(n, dtype=jnp.float32) % 17) / 16.0
+    return flat.reshape(shape).astype(dtype)
+
+
+def build_fused(name: str, n: int, *, interpret: bool | None = None
+                ) -> tuple[Callable, tuple]:
+    """(fn, args) running fused kernel ``name`` over ``n`` workload units."""
+    if name == "flash_attention":
+        from repro.kernels.flash_attention import flash_attention
+
+        q = _ramp((1, _BLK, _HEADS, _BLK))
+        k = _ramp((1, _BLK * n, 1, _BLK))
+        v = _ramp((1, _BLK * n, 1, _BLK))
+
+        def fn(q, k, v):
+            # causal=False: every KV block is visited, so work is exactly
+            # linear in n (causal skips masked blocks and breaks the slope)
+            return flash_attention(q, k, v, causal=False, block_q=_BLK,
+                                   block_k=_BLK, interpret=interpret)
+
+        return fn, (q, k, v)
+    if name == "flash_decode":
+        from repro.kernels.flash_decode import flash_decode
+
+        q = _ramp((1, _HEADS, _BLK))
+        k = _ramp((1, _BLK * n, 1, _BLK))
+        v = _ramp((1, _BLK * n, 1, _BLK))
+        kv_len = jnp.full((1,), _BLK * n, jnp.int32)
+
+        def fn(q, k, v, kv_len):
+            return flash_decode(q, k, v, kv_len, block_k=_BLK,
+                                interpret=interpret)
+
+        return fn, (q, k, v, kv_len)
+    if name == "mamba_scan":
+        from repro.kernels.mamba_scan import mamba_scan
+
+        s = _CHUNK * n
+        x = _ramp((1, s, _DM))
+        dt = _ramp((1, s, _DM))
+        a = -_ramp((_DM, _DN), lo=0.1, hi=1.0)   # stable decay: A < 0
+        b = _ramp((1, s, _DN))
+        c = _ramp((1, s, _DN))
+        d = _ramp((_DM,))
+
+        def fn(x, dt, a, b, c, d):
+            return mamba_scan(x, dt, a, b, c, d, chunk=_CHUNK,
+                              interpret=interpret)
+
+        return fn, (x, dt, a, b, c, d)
+    if name == "rmsnorm":
+        from repro.kernels.rmsnorm import rmsnorm
+
+        x = _ramp((_ROWS * n, _COLS))
+        w = _ramp((_COLS,), lo=0.5, hi=1.5)
+
+        def fn(x, w):
+            return rmsnorm(x, w, block_rows=_ROWS, interpret=interpret)
+
+        return fn, (x, w)
+    raise ValueError(f"unknown fused kernel {name!r}; "
+                     f"known: {', '.join(FUSED_KERNELS)}")

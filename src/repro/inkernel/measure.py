@@ -170,6 +170,57 @@ def run_prepared_inkernel(prepared: PreparedKernel,
                        reps=prepared.reps, retry_lens=prepared.retry_lens)
 
 
+def prepare_fused(name: str, lens: tuple[int, int] | None = None,
+                  interpret: bool | None = None, reps: int | None = None,
+                  cache: Any = None, env: Mapping[str, str] | None = None
+                  ) -> PreparedKernel:
+    """Compile a fused kernel at both workload sizes; no timing.
+
+    Unlike the chain kernels, the two workload sizes have *different* input
+    shapes (the KV cache / sequence grows with ``n``), so each compiled
+    callable closes over its own arguments and ``PreparedKernel.args`` stays
+    empty — ``Timer.slope`` then times two zero-arg thunks, which is exactly
+    the same overhead-cancelling algebra (both share the launch + DMA path
+    of their common block shapes)."""
+    import functools
+
+    from repro.inkernel.fused import FUSED_LENS, build_fused
+
+    lens = tuple(lens or FUSED_LENS)
+
+    def build(n: int) -> Callable:
+        fn, args = build_fused(name, n, interpret=interpret)
+        compiled = _cached_aot(fn, args, f"inkernel.fused.{name}",
+                               f"units{n}", cache, env, dtype="float32")
+        return functools.partial(compiled, *args)
+
+    prepared = PreparedKernel(lens=lens, retry_lens=None, args=(), reps=reps,
+                              _build=build)
+    prepared.fn_by_len(lens[0])
+    prepared.fn_by_len(lens[1])
+    return prepared
+
+
+def run_prepared_fused(prepared: PreparedKernel,
+                       timer: Timer | None = None) -> Measurement:
+    """Time a prepared fused kernel: per-workload-unit latency slope."""
+    timer = timer or Timer()
+    return timer.slope(prepared.fn_by_len, *prepared.lens,
+                       reps=prepared.reps, retry_lens=prepared.retry_lens)
+
+
+def measure_fused_full(name: str, lens: tuple[int, int] | None = None,
+                       timer: Timer | None = None,
+                       interpret: bool | None = None,
+                       reps: int | None = None) -> Measurement:
+    """Per-unit latency of one fused kernel (KV block / chunk / row block).
+
+    Serial form of ``run_prepared_fused(prepare_fused(...))``.
+    """
+    return run_prepared_fused(
+        prepare_fused(name, lens, interpret=interpret, reps=reps), timer)
+
+
 def measure_inkernel_full(spec: OpSpec, lens: tuple[int, int] = INKERNEL_LENS,
                           shape: tuple[int, int] | None = None,
                           timer: Timer | None = None,

@@ -1,0 +1,331 @@
+"""Tests for repro.audit.dataflow: serialization / residency / signature
+certificates, fused-kernel units, custom-call pricing and the zoo lints."""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.experimental import pallas as pl
+
+from repro.audit import audit_fused, audit_target, fused_registry, kernel_cert
+from repro.audit.dataflow import (_residency_cause, audit_alu_kernel,
+                                  audit_inkernel_mem, audit_inkernel_op,
+                                  fused_unit)
+from repro.core.chains import default_registry
+from repro.core.latency_db import LatencyDB, LatencyRecord
+from repro.inkernel.fused import FUSED_KERNELS, FUSED_LENS, build_fused
+
+REGS = {s.name: s for s in default_registry()}
+
+# Per-step countable-op units of the unrolled ALU chains (kernels/alu_chain):
+# the signature-exactness ground truth the property test scales against.
+ALU_UNITS = {"add": {"add": 1}, "mul": {"multiply": 1},
+             "fma": {"add": 1, "multiply": 1}}
+
+ENV = dict(device_kind="TestDev", backend="cpu", jax_version="0.0.test")
+
+
+def _fused_db(ns=100.0, unit_bytes=2048):
+    db = LatencyDB()
+    for name in FUSED_KERNELS:
+        db.add(LatencyRecord(
+            op=f"inkernel.fused.{name}", category="kernel", dtype="float32",
+            opt_level="O3", latency_ns=ns, mad_ns=0.0, cycles=0.0, guard=0,
+            net_latency_ns=ns, n_samples=3, measured_at=str(time.time()),
+            notes=f"pallas fused kernel lens=2-6 unit_bytes={unit_bytes}",
+            **ENV))
+    return db
+
+
+# -------------------------------------------------- serialization properties
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=2, max_value=10),
+       st.integers(min_value=11, max_value=24),
+       st.sampled_from(["add", "mul"]))
+def test_fori_chain_serialization_length(n1, n2, spec_name):
+    """Property: a fori chain certifies as one serial dependence chain whose
+    trip counts are exactly the requested lengths — the slope denominator."""
+    v = audit_inkernel_op(REGS[spec_name], "O3", lens=(n1, n2))
+    assert v.status == "audited", v
+    assert f"trips={n1},{n2}" in v.detail, v
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=2, max_value=12),
+       st.sampled_from(sorted(ALU_UNITS)))
+def test_alu_chain_signature_exactness(n, alu_op):
+    """Property: the unrolled chain's countable multiset is exactly n x the
+    per-step unit, and its dependence depth equals that count (serial)."""
+    from repro.kernels.alu_chain import alu_chain
+
+    x = jnp.full((8, 128), 1.5, jnp.float32)
+    a = jnp.full((8, 128), 0.5, jnp.float32)
+    cert = kernel_cert(
+        lambda x, a: alu_chain(x, a, n=n, op=alu_op, interpret=True), x, a)
+    unit = ALU_UNITS[alu_op]
+    assert dict(cert.ops) == {k: n * w for k, w in unit.items()}, cert.ops
+    assert cert.chain.kind == "straightline" and cert.chain.serialized
+    assert cert.chain.length == n * sum(unit.values()), cert.chain
+
+
+def test_alu_chain_dtype_sweep():
+    """Signature exactness is dtype-independent (the certificate counts
+    primitive applications, not lanes)."""
+    from repro.kernels.alu_chain import alu_chain
+
+    for dtype in (jnp.float32, jnp.bfloat16):
+        x = jnp.full((8, 128), 1.5, dtype)
+        a = jnp.full((8, 128), 0.5, dtype)
+        cert = kernel_cert(
+            lambda x, a: alu_chain(x, a, n=5, op="add", interpret=True), x, a)
+        assert dict(cert.ops) == {"add": 5}, (dtype, cert.ops)
+
+
+# ------------------------------------------------------------- rejections
+def test_parallelized_chain_rejected():
+    """Regression: a deliberately parallelized body — n independent products
+    recombined by a reduction tree's worth of adds — must NOT certify: the
+    countable ops outnumber the serial path depth (parallel shortcut)."""
+    n = 4
+
+    def parallel(x, a):
+        def body(x_ref, a_ref, o_ref):
+            xv, av = x_ref[...], a_ref[...]
+            acc = xv
+            for t in [xv * av for _ in range(n)]:
+                acc = acc + t
+            o_ref[...] = acc
+        return pl.pallas_call(
+            body, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x, a)
+
+    x = jnp.ones((8, 128), jnp.float32)
+    a = jnp.ones((8, 128), jnp.float32)
+    cert = kernel_cert(parallel, x, a)
+    assert not cert.chain.serialized
+    assert cert.chain.cause == "parallel-shortcut", cert.chain
+
+
+def test_carry_independent_loop_rejected():
+    """A fori body that ignores its carry has no measured dependence chain."""
+    def independent(x, a):
+        def body(x_ref, a_ref, o_ref):
+            def step(_i, _c):
+                return x_ref[...] * a_ref[...]
+            o_ref[...] = jax.lax.fori_loop(0, 6, step, x_ref[...])
+        return pl.pallas_call(
+            body, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True)(x, a)
+
+    x = jnp.ones((8, 128), jnp.float32)
+    a = jnp.ones((8, 128), jnp.float32)
+    cert = kernel_cert(independent, x, a)
+    assert not cert.chain.serialized
+    assert cert.chain.cause == "no-dependence", cert.chain
+
+
+# --------------------------------------------------------------- residency
+def test_chase_residency_both_spaces():
+    for space in ("vmem", "any"):
+        v = audit_inkernel_mem(8192, "O3", space=space)
+        assert v.status == "audited", (space, v)
+
+
+def test_residency_mismatch_detected():
+    """An HBM-streamed ring fails the default all-VMEM expectation."""
+    import functools
+
+    from repro.core.membench import build_ring
+    from repro.kernels.chase import chase
+
+    ring, start = build_ring(8192, 64)
+    fn = functools.partial(chase, steps=8, memory_space="any",
+                           interpret=True)
+    cert = kernel_cert(fn, ring, start)
+    cause = _residency_cause(cert)          # expects vmem everywhere
+    assert cause.startswith("residency-mismatch(ref0:any!=vmem)"), cause
+    assert _residency_cause(cert, {0: "any"}) == ""
+
+
+# ------------------------------------------------------------ fused kernels
+def test_fused_kernels_all_audited():
+    for name in FUSED_KERNELS:
+        v = audit_fused(name)
+        assert v.status == "audited", (name, v)
+        assert "unit_bytes=" in v.detail or "bytes" in v.detail or v.detail
+
+
+def test_fused_unit_signatures():
+    reg = fused_registry()
+    assert set(reg) == set(FUSED_KERNELS)
+    assert reg["rmsnorm"]["bytes"] == 4096
+    assert reg["rmsnorm"]["ops"]["rsqrt"] == 1
+    assert reg["flash_attention"]["ops"]["dot"] > 0
+    assert reg["flash_attention"]["ops"]["exponential"] > 0
+    for name, unit in reg.items():
+        assert unit["bytes"] > 0, name
+
+
+def test_fused_signature_linear_across_sizes():
+    """The two-size signature delta divides exactly — the property that
+    makes a fused kernel measurable by Timer.slope at all."""
+    n1, n2 = FUSED_LENS
+    unit = fused_unit("rmsnorm", (n1, n2))
+    c = {}
+    for n in (n1, n2):
+        fn, args = build_fused("rmsnorm", n, interpret=True)
+        c[n] = kernel_cert(fn, *args)
+    for k, u in unit["ops"].items():
+        assert c[n2].ops[k] - c[n1].ops[k] == (n2 - n1) * u, k
+    assert c[n2].hbm_bytes - c[n1].hbm_bytes == (n2 - n1) * unit["bytes"]
+
+
+def test_audit_target_fused_and_kernel_rows():
+    v = audit_target("inkernel.fused.rmsnorm", "O3")
+    assert v.status == "audited", v
+    assert v.ok and v.note() == "audit=audited"
+    v = audit_target("kernel.alu_chain.fma", "O3")
+    assert v.status == "audited", v
+    v = audit_target("inkernel.fused.nosuchkernel", "O3")
+    assert v.status == "unaudited", v
+
+
+def test_alu_audit_unknown_op():
+    v = audit_alu_kernel("nosuchop", "O3")
+    assert v.status == "unaudited" and v.cause == "unknown-kernel-op"
+
+
+def test_fused_probe_measures():
+    """FusedKernelProbe's measurement path: a finite two-size slope with the
+    unit-bytes note the estimator's pricing reads back."""
+    from repro.core.timing import Timer
+    from repro.inkernel import prepare_fused, run_prepared_fused
+
+    # mamba_scan: largest per-unit cost of the four, so the two-size delta
+    # clears host-timer noise even at tiny reps on a loaded CI box
+    prepared = prepare_fused("mamba_scan", lens=(2, 6), reps=3)
+    m = run_prepared_fused(prepared, Timer(warmup=1, reps=3))
+    assert math.isfinite(m.median_ns) and m.median_ns > 0
+
+
+# ------------------------------------------------- estimator custom-call path
+FUSED_HLO = """
+HloModule fused_site
+
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128] parameter(0)
+  %cc = f32[16,128] custom-call(%p0), custom_call_target="tpu_custom_call", backend_config="mosaic kernel=flash_attention_kernel"
+  ROOT %a = f32[16,128] add(%cc, %p0)
+}
+"""
+
+
+def test_estimator_prices_resolved_custom_call():
+    from repro.core.perfmodel import HloLatencyEstimator
+
+    db = _fused_db(ns=100.0, unit_bytes=2048)
+    est = HloLatencyEstimator(db, filters=ENV)
+    r = est.estimate(FUSED_HLO)
+    # operands+result = 2 x 16*128*4 = 16384 bytes -> 8 units x 100ns
+    assert r.by_class["fused:flash_attention"].ns == pytest.approx(800.0)
+    assert not any(op.startswith("custom-call")
+                   for op, _ in r.unpriced_opcodes)
+
+
+def test_estimator_reports_unresolved_target_by_name():
+    """Satellite: unknown custom-calls surface per target, never lumped."""
+    from repro.core.perfmodel import HloLatencyEstimator
+
+    est = HloLatencyEstimator(_fused_db(), filters=ENV)
+    hlo = FUSED_HLO.replace("tpu_custom_call", "cudnn$fmha").replace(
+        "flash_attention_kernel", "opaque")
+    r = est.estimate(hlo)
+    assert ("custom-call:cudnn$fmha", 1.0) in r.unpriced_opcodes, \
+        r.unpriced_opcodes
+    assert r.coverage < 1.0
+
+
+def test_resolve_custom_call():
+    from repro.core.hlo_analysis import resolve_custom_call
+
+    assert resolve_custom_call("flash_decode") == "flash_decode"
+    assert resolve_custom_call("tpu_custom_call",
+                               'cfg "mamba_scan_fwd"') == "mamba_scan"
+    assert resolve_custom_call("cudnn$fmha") is None
+
+
+# ------------------------------------------------------------------- lints
+def test_lint_zoo_resolves_known_custom_call(monkeypatch):
+    from repro.audit import lint as lint_mod
+
+    monkeypatch.setattr(lint_mod, "_zoo_hlo", lambda arch: FUSED_HLO)
+    assert lint_mod.lint_zoo(archs=["fakearch"]) == []
+
+
+def test_lint_zoo_accepts_known_library_call(monkeypatch):
+    """Documented XLA library targets (TopK, the MoE router's lowering)
+    pass the lint but are never priced — no fused row exists for them."""
+    from repro.audit import lint as lint_mod
+
+    hlo = FUSED_HLO.replace("tpu_custom_call", "TopK").replace(
+        "mosaic kernel=flash_attention_kernel", "")
+    monkeypatch.setattr(lint_mod, "_zoo_hlo", lambda arch: hlo)
+    assert lint_mod.lint_zoo(archs=["fakearch"]) == []
+
+
+def test_lint_zoo_rejects_unknown_custom_call(monkeypatch):
+    from repro.audit import lint as lint_mod
+
+    bad = FUSED_HLO.replace("flash_attention_kernel", "mystery")
+    monkeypatch.setattr(lint_mod, "_zoo_hlo", lambda arch: bad)
+    findings = lint_mod.lint_zoo(archs=["fakearch"])
+    assert len(findings) == 1, findings
+    assert "tpu_custom_call" in findings[0].message
+
+
+def test_lint_dataflow_clean():
+    from repro.audit.lint import lint_dataflow
+
+    assert lint_dataflow() == []
+
+
+# --------------------------------------------------------------- zoo costing
+def test_zoo_cost_sites_and_pricing():
+    """Every synthesized TPU-form site of a config prices from fused rows."""
+    from benchmarks.zoo_cost import fused_hlo, fused_sites
+    from repro.api.probes import serving_tiny_config
+    from repro.core.perfmodel import HloLatencyEstimator
+
+    cfg, _rt = serving_tiny_config()
+    est = HloLatencyEstimator(_fused_db(), filters=ENV)
+    for phase, kernel in (("prefill", "flash_attention"),
+                          ("decode", "flash_decode")):
+        sites = fused_sites(cfg, phase)
+        assert sum(1 for k, *_ in sites if k == kernel) == cfg.n_layers
+        r = est.estimate(fused_hlo("tiny", sites))
+        assert r.priced_instances == len(sites)
+        assert not any(op.startswith("custom-call")
+                       for op, _ in r.unpriced_opcodes)
+
+
+def test_zoo_cost_floor_covers_all_rows():
+    """The checked-in floor names all twelve rows and demands full
+    custom-call coverage everywhere."""
+    import json
+    import os
+
+    from repro.configs.registry import all_arch_ids
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "zoo_cost_floor.json")
+    with open(path) as f:
+        floor = json.load(f)
+    expected = set(all_arch_ids()) | {"serving-tiny.prefill",
+                                      "serving-tiny.decode"}
+    assert set(floor) == expected
+    for model, bounds in floor.items():
+        assert bounds["custom_call_coverage"] == 1.0, model
+        assert 0.0 <= bounds["opcode_coverage"] <= 1.0, model
