@@ -1,0 +1,96 @@
+"""CI gate: sharded-serving prediction error within the checked-in baseline.
+
+Reads the ``serving.tp*`` rows of a LatencyDB (written by ``python -m repro
+characterize --plan serving-sharded`` or ``benchmarks.bench_collectives``),
+recomputes each cell's ``|log10(predicted/measured)|`` and coverage, and
+fails if any cell violates ``benchmarks/sharded_serving_tolerance.json``.
+On top of the unsharded gate's checks this one enforces the collective-term
+invariant: ``coll_unpriced`` must not exceed the baseline's
+``max_coll_unpriced`` (0 — a collective op the estimator could not price
+from a measured ``coll.*`` ladder rung is a hard failure, never a silently
+default-priced term).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.check_sharded_serving --db /tmp/db.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Sequence
+
+from repro.core import perfmodel
+from repro.core.latency_db import LatencyDB
+
+DEFAULT_TOLERANCE = os.path.join(os.path.dirname(__file__),
+                                 "sharded_serving_tolerance.json")
+
+
+def check_points(points: Sequence[perfmodel.ServingPoint],
+                 tolerance: dict) -> list[str]:
+    """Violation messages for sharded ``points`` against a baseline."""
+    max_err = float(tolerance["max_abs_log10_ratio"])
+    min_cov = float(tolerance.get("min_coverage", 0.0))
+    max_unpriced = float(tolerance.get("max_coll_unpriced", 0))
+    violations = []
+    for pt in points:
+        cell = f"serving.tp{pt.tp}.{pt.phase}.b{pt.batch}p{pt.prompt_len}"
+        err = pt.abs_log10_error
+        if err > max_err:
+            violations.append(
+                f"{cell}: |log10(pred/meas)| = {err:.2f} > {max_err:.2f} "
+                f"(predicted {pt.predicted_ns:.0f}ns, "
+                f"measured {pt.measured_ns:.0f}ns)")
+        if pt.coverage < min_cov:
+            violations.append(
+                f"{cell}: coverage {pt.coverage:.2f} < {min_cov:.2f} "
+                "(estimator priced too little of the module from the DB)")
+        if pt.coll_unpriced > max_unpriced:
+            violations.append(
+                f"{cell}: {pt.coll_unpriced:g} collective op(s) had no "
+                f"measured coll.* ladder rung to price from "
+                f"(> {max_unpriced:g}); run --plan collectives at tp="
+                f"{pt.tp} first")
+    return violations
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--db", required=True, help="LatencyDB JSON path")
+    ap.add_argument("--tolerance", default=DEFAULT_TOLERANCE,
+                    help="tolerance baseline JSON (default: checked-in)")
+    args = ap.parse_args(argv)
+
+    with open(args.tolerance) as f:
+        tolerance = json.load(f)
+    db = LatencyDB(args.db)
+    points = [perfmodel.servingpoint_from_record(r) for r in db.records()
+              if r.op.startswith("serving.tp")]
+    if not points:
+        print(f"error: no serving.tp* rows in {args.db} — "
+              "run --plan serving-sharded first", file=sys.stderr)
+        return 2
+    for pt in sorted(points, key=lambda p: (p.tp, p.phase, p.batch,
+                                            p.prompt_len)):
+        print(f"serving.tp{pt.tp}.{pt.phase}.b{pt.batch}p{pt.prompt_len}: "
+              f"predicted={pt.predicted_ns:.0f}ns "
+              f"(coll={pt.collective_ns:.0f}ns) "
+              f"measured={pt.measured_ns:.0f}ns "
+              f"|log10 err|={pt.abs_log10_error:.2f} "
+              f"coverage={pt.coverage:.2f} coll_unpriced={pt.coll_unpriced:g}")
+    violations = check_points(points, tolerance)
+    for v in violations:
+        print(f"VIOLATION: {v}", file=sys.stderr)
+    if not violations:
+        print(f"{len(points)} sharded cell(s) within tolerance "
+              f"(max |log10 err| {tolerance['max_abs_log10_ratio']}, "
+              f"min coverage {tolerance.get('min_coverage', 0.0)}, "
+              f"max coll_unpriced {tolerance.get('max_coll_unpriced', 0)})")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

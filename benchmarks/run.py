@@ -23,8 +23,8 @@ def main() -> None:
                     help="comma-separated bench names (e.g. clock,alu)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_characterize_speed, bench_serving_slo,
-                            paper_tables as pt)
+    from benchmarks import (bench_characterize_speed, bench_collectives,
+                            bench_serving_slo, paper_tables as pt)
     timer = Timer(warmup=2, reps=10 if args.quick else 20)
     benches = {
         "clock": lambda t: pt.bench_clock_overhead(t),
@@ -36,6 +36,7 @@ def main() -> None:
         "inkernel_memory": lambda t: pt.bench_inkernel_memory(t, quick=args.quick),
         "serving_cost": lambda t: pt.bench_serving_cost(t, quick=args.quick),
         "serving_slo": lambda t: bench_serving_slo.run_bench(t, quick=args.quick),
+        "collectives": lambda t: bench_collectives.run_bench(t, quick=args.quick),
         "characterize_speed": lambda t: bench_characterize_speed.run_bench(
             t, quick=args.quick),
         "fanout": lambda t: pt.bench_fanout_scaling(t, quick=args.quick),

@@ -16,27 +16,30 @@ that pipeline as an API:
 * :class:`ResultSet` — per-probe outcomes plus report helpers.
 
 CLI: ``python -m repro characterize --plan
-quick|table2|memory|inkernel|memory-inkernel|fused|serving|slo|full
-[--shard auto|N]`` and ``python -m repro serve-slo --rates 20,50,100``
+quick|table2|memory|inkernel|memory-inkernel|fused|serving|collectives|
+serving-sharded|slo|full [--shard auto|N]`` and ``python -m repro serve-slo --rates 20,50,100``
 (predicted-vs-measured serving SLO sweep, docs/traffic.md).
 The legacy entry points (``measure.run_suite``, ``measure.clock_overhead``,
 ``membench.sweep``) are deprecation shims over this package.
 """
 from repro.api.plan import (PLAN_NAMES, QUICK_OPS, SERVING_CELLS, SLO_RATES,
                             Plan, named_plan)
-from repro.api.probes import (ClockOverheadProbe, FusedKernelProbe,
-                              InstructionProbe, KernelChainProbe, KernelProbe,
-                              MemoryChaseProbe, MemoryProbe, Probe,
-                              ProbeContext, ServingCostProbe, SloProbe,
-                              serving_tiny_config)
+from repro.api.probes import (ClockOverheadProbe, CollectiveProbe,
+                              FusedKernelProbe, InstructionProbe,
+                              KernelChainProbe, KernelProbe, MemoryChaseProbe,
+                              MemoryProbe, Probe, ProbeContext,
+                              ServingCostProbe, ShardedServingCostProbe,
+                              SloProbe, serving_tiny_config)
 from repro.api.session import ProbeResult, ResultSet, Session
 
 __all__ = [
     "PLAN_NAMES", "QUICK_OPS", "SERVING_CELLS", "SLO_RATES", "Plan",
     "named_plan",
-    "ClockOverheadProbe", "FusedKernelProbe", "InstructionProbe",
+    "ClockOverheadProbe", "CollectiveProbe", "FusedKernelProbe",
+    "InstructionProbe",
     "KernelChainProbe", "KernelProbe", "MemoryChaseProbe", "MemoryProbe",
     "Probe",
     "ProbeContext", "ProbeResult", "ResultSet", "Session",
-    "ServingCostProbe", "SloProbe", "serving_tiny_config",
+    "ServingCostProbe", "ShardedServingCostProbe", "SloProbe",
+    "serving_tiny_config",
 ]

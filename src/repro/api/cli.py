@@ -9,6 +9,8 @@ Examples::
     python -m repro characterize --plan inkernel --table   # in-pipeline probes
     python -m repro characterize --plan memory-inkernel --table  # VMEM/HBM ladder
     python -m repro characterize --plan serving --table  # predicted vs measured
+    python -m repro characterize --plan collectives --table  # psum/gather ladder
+    python -m repro characterize --plan serving-sharded --table  # TP serving
     python -m repro characterize --plan full --shard auto  # one shard per device
     python -m repro characterize --plan table2 --shard 4   # first 4 devices
     python -m repro serve-slo --rates 20,50,100 --db /tmp/db.json
@@ -246,6 +248,10 @@ def cmd_characterize(args: argparse.Namespace) -> int:
         if compare.count("\n") > 1:  # header + separator + >=1 paired row
             print("\n== host vs in-kernel (paper's in-pipeline method) ==")
             print(compare)
+        coll = session.db.compare_markdown(prefix="coll.")
+        if coll.count("\n") > 1:
+            print("\n== collective ladder (dependent-chain slope per rung) ==")
+            print(coll)
         serving = session.db.compare_markdown(prefix="serving.")
         if serving.count("\n") > 1:
             print("\n== serving predicted vs measured (LatencyDB x perfmodel) ==")

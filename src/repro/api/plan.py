@@ -7,7 +7,8 @@ them — so "the full paper reproduction" is one Plan expression, and CI's
 quick pass is the same expression with a keep-set applied.
 
 Named plans (``quick`` / ``table2`` / ``memory`` / ``inkernel`` /
-``memory-inkernel`` / ``fused`` / ``serving`` / ``slo`` / ``full``) back the
+``memory-inkernel`` / ``fused`` / ``serving`` / ``collectives`` /
+``serving-sharded`` / ``slo`` / ``full``) back the
 ``python -m repro characterize --plan`` CLI.
 """
 from __future__ import annotations
@@ -19,10 +20,11 @@ from repro.core import chains
 from repro.core.chains import OpSpec
 from repro.core.optlevels import OPT_LEVELS
 
-from repro.api.probes import (ClockOverheadProbe, FusedKernelProbe,
-                              InstructionProbe, KernelChainProbe, KernelProbe,
-                              MemoryChaseProbe, MemoryProbe, Probe,
-                              ServingCostProbe, SloProbe)
+from repro.api.probes import (ClockOverheadProbe, CollectiveProbe,
+                              FusedKernelProbe, InstructionProbe,
+                              KernelChainProbe, KernelProbe, MemoryChaseProbe,
+                              MemoryProbe, Probe, ServingCostProbe,
+                              ShardedServingCostProbe, SloProbe)
 
 # The CLI/CI keep-set: one representative per interesting latency class,
 # including the divisor-taxonomy splits the paper highlights.
@@ -31,7 +33,8 @@ QUICK_OPS = ("add", "mul", "mad", "div.s.regular", "div.s.irregular",
              "rsqrt", "sin", "ex2", "popc", "clz", "add.bfloat16")
 
 PLAN_NAMES = ("quick", "table2", "memory", "inkernel", "memory-inkernel",
-              "fused", "serving", "slo", "full")
+              "fused", "serving", "collectives", "serving-sharded", "slo",
+              "full")
 
 # Representative (batch, prompt_len) serving cells: a single-sequence short
 # prompt and a batched longer one — enough to expose both phases' scaling
@@ -193,6 +196,53 @@ class Plan:
         return Plan(_dedupe(tuple(probes)), name="serving")
 
     @staticmethod
+    def collectives(kinds: Sequence[str] | None = None,
+                    payloads: Sequence[int] | None = None,
+                    devices: int | None = None,
+                    lens: tuple[int, int] | None = None) -> "Plan":
+        """Collective dependent-chain ladder (paper's chain method on the
+        interconnect): one :class:`CollectiveProbe` per ``kind x payload``
+        rung over ``devices`` mesh participants. These are the
+        ``coll.<kind>.d<N>.<bytes>`` rows the estimator's collective term
+        prices sharded HLO from."""
+        from repro.parallel import ladders
+
+        kinds = tuple(kinds if kinds is not None else ladders.LADDER_KINDS)
+        payloads = tuple(payloads if payloads is not None
+                         else ladders.DEFAULT_PAYLOADS)
+        return Plan(tuple(CollectiveProbe(k, p, devices=devices, lens=lens)
+                          for k in kinds for p in payloads),
+                    name="collectives")
+
+    @staticmethod
+    def serving_sharded(cells: Sequence[tuple[int, int]] = ((1, 16),),
+                        phases: Sequence[str] = ("prefill", "decode"),
+                        tp: int | None = None, cfg=None, rt=None,
+                        with_deps: bool = True) -> "Plan":
+        """Tensor-parallel serving characterization: one
+        :class:`ShardedServingCostProbe` per cell and phase under a
+        ``tp``-way model mesh, preceded (by default) by the estimator's
+        pricing inputs — instruction rows, memory rungs, AND the collective
+        ladder at the *same* device count, so the sharded prediction's
+        collective term is measurement-backed, never default-priced.
+        ``tp=None`` resolves to 2 when the backend has >= 2 devices.
+        """
+        if tp is None:
+            import jax
+
+            tp = 2 if jax.device_count() >= 2 else 1
+        probes: list[Probe] = []
+        if with_deps:
+            probes += list(Plan.instructions(ops=QUICK_OPS,
+                                             opt_levels=("O3",)))
+            probes += list(Plan.memory((1 << 13, 1 << 17, 1 << 21)))
+            if tp > 1:
+                probes += list(Plan.collectives(devices=tp))
+        probes += [ShardedServingCostProbe(phase, b, p, tp=tp, cfg=cfg, rt=rt)
+                   for b, p in cells for phase in phases]
+        return Plan(_dedupe(tuple(probes)), name="serving-sharded")
+
+    @staticmethod
     def slo(rates: Sequence[float] = SLO_RATES, n_requests: int = 12,
             n_slots: int = 4, seed: int = 0, cfg=None, rt=None,
             with_deps: bool = True) -> "Plan":
@@ -295,7 +345,7 @@ def _dedupe(probes: Sequence[Probe]) -> tuple[Probe, ...]:
 def named_plan(name: str) -> Plan:
     """The CLI's plan registry.
     quick | table2 | memory | inkernel | memory-inkernel | fused | serving |
-    slo | full."""
+    collectives | serving-sharded | slo | full."""
     if name == "quick":
         plan = (Plan.clock_overhead(("O0", "O3"))
                 + Plan.instructions(ops=QUICK_OPS, opt_levels=("O0", "O3"))
@@ -314,6 +364,10 @@ def named_plan(name: str) -> Plan:
         plan = Plan.fused()
     elif name == "serving":
         plan = Plan.serving()
+    elif name == "collectives":
+        plan = Plan.collectives()
+    elif name == "serving-sharded":
+        plan = Plan.serving_sharded()
     elif name == "slo":
         plan = Plan.slo()
     elif name == "full":
@@ -326,7 +380,9 @@ def named_plan(name: str) -> Plan:
                 + Plan.inkernel()
                 + Plan.memory_inkernel()
                 + Plan.fused()
+                + Plan.collectives()
                 + Plan.serving(with_deps=False)
+                + Plan.serving_sharded(with_deps=False)
                 + Plan.slo(with_deps=False))
     else:
         raise ValueError(f"unknown plan {name!r}; choose from {PLAN_NAMES}")

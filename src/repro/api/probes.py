@@ -608,6 +608,89 @@ class MemoryChaseProbe(Probe):
                           f"lens={self.lens[0]}-{self.lens[1]}")
 
 
+class CollectiveProbe(Probe):
+    """One collective-ladder rung: ``n`` dependent collective ops chained
+    inside ``shard_map``, slope-timed (``repro.parallel.ladders``).
+
+    The paper's dependent-chain method pointed at the interconnect: two chain
+    lengths share the dispatch, shard_map wrapping and first-transfer warm-up,
+    so ``Timer.slope`` isolates the pure per-collective cost. One probe per
+    ``(kind, device count, payload)``; op name
+    ``coll.<kind>.d<devices>.<bytes>`` with the payload being the *nominal*
+    per-device rung (the actual local bytes after divisibility rounding, and
+    the ring-convention wire bytes per step, ride in the record notes —
+    ``HloLatencyEstimator.collective_ladder`` prices from those).
+
+    ``opt_level`` is pinned to ``"O3"``: a shard_map chain is always fully
+    compiled. Non-default chain lengths are a different fidelity and suffix
+    the cache identity, like ``MemoryProbe.steps``. Off-TPU the mesh is built
+    from simulated XLA host devices
+    (``--xla_force_host_platform_device_count``); a backend with fewer
+    devices than the row names fails structurally instead of silently
+    measuring a smaller group.
+    """
+
+    category = "collective"
+    dtype = "float32"
+    DEFAULT_LENS = (2, 6)
+
+    def __init__(self, kind: str, payload_bytes: int,
+                 devices: int | None = None,
+                 lens: tuple[int, int] | None = None, reps: int = 5):
+        from repro.parallel import ladders
+
+        if kind not in ladders.LADDER_KINDS:
+            raise ValueError(f"unknown collective kind {kind!r}; known: "
+                             f"{', '.join(ladders.LADDER_KINDS)}")
+        if payload_bytes <= 0:
+            raise ValueError(f"payload_bytes must be positive, "
+                             f"got {payload_bytes}")
+        if devices is None:
+            import jax
+
+            devices = jax.device_count()
+        self.kind = kind
+        self.payload_bytes = int(payload_bytes)
+        self.devices = int(devices)
+        self.lens = tuple(lens) if lens is not None else self.DEFAULT_LENS
+        self.reps = reps
+        self.opt_level = "O3"
+        self.base_op = f"coll.{kind}.d{self.devices}.{self.payload_bytes}"
+        self.op = self.base_op
+        if self.lens != self.DEFAULT_LENS:
+            self.op += f".l{self.lens[0]}-{self.lens[1]}"
+
+    def match_names(self) -> frozenset[str]:
+        # addressable by the full rung name, the unsuffixed rung, the kind
+        # family (``--ops coll.psum``) and the whole-family row ``coll``
+        return frozenset((self.op, self.base_op,
+                          f"coll.{self.kind}", "coll"))
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        return self.run_prepared(ctx, self.prepare(ctx))
+
+    def prepare(self, ctx: ProbeContext):
+        from repro.parallel import ladders
+
+        return ladders.prepare_collective(
+            self.kind, self.payload_bytes, self.devices, self.lens,
+            op=self.op, cache=ctx.compile_cache, env=ctx.env)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        from repro.parallel import ladders
+
+        if prepared is None:
+            return self.run(ctx)
+        fn_by_len, x, local_bytes = prepared
+        m = ctx.timer.slope(fn_by_len, *self.lens, x, reps=self.reps)
+        wire = ladders.step_wire_bytes(self.kind, local_bytes, self.devices)
+        return self._record(
+            ctx, m,
+            notes=f"kind={self.kind} devices={self.devices} "
+                  f"payload_bytes={local_bytes} wire_bytes={wire:.0f} "
+                  f"lens={self.lens[0]}-{self.lens[1]}")
+
+
 def serving_tiny_config():
     """The default model the serving cells characterize: small enough for CI
     wall clocks, deep enough (2 scanned periods) that the decode-step HLO
@@ -748,6 +831,148 @@ class ServingCostProbe(Probe):
                  f"predicted_ns={report.total_ns:.3f} "
                  f"compute_ns={report.compute_ns:.3f} "
                  f"memory_ns={report.memory_ns:.3f} "
+                 f"coverage={report.coverage:.4f} "
+                 f"bound={report.bound}")
+        return self._record(ctx, m, notes=notes)
+
+
+class ShardedServingCostProbe(Probe):
+    """Price + measure one *tensor-parallel* serving cell: the Engine's
+    prefill or decode-step HLO lowered under a ``(1, tp)`` mesh
+    (``launch/mesh.make_mesh_for``), params sharded over the ``model`` axis.
+
+    The sharded lowering makes GSPMD insert real collectives; the estimator
+    prices the per-shard compute/memory from the existing measured rows
+    *plus* the new collective term from the measured ladder rungs
+    (``coll.<kind>.d<N>.<bytes>``), and the compiled SPMD executable is
+    wall-clock timed on the same simulated mesh — predicted-vs-measured for
+    distributed serving in one record. Collective pricing is explicit: the
+    notes carry the collective-ns split, the number of priced collective
+    instances and the count left unpriced (``coll_unpriced=0`` is the CI
+    acceptance gate — zero default-priced collectives).
+
+    Op names ``serving.tp<N>.<phase>.b<B>p<L>`` — rendered by the same
+    ``compare_markdown(prefix="serving.")`` table and parsed by the same
+    :func:`~repro.core.perfmodel.servingpoint_from_record` (phase rides in
+    the notes) as the single-device cells.
+    """
+
+    category = "serving"
+
+    def __init__(self, phase: str, batch: int, prompt_len: int, tp: int = 2,
+                 cfg=None, rt=None, max_len: int | None = None, reps: int = 5):
+        if phase not in ("prefill", "decode"):
+            raise ValueError(f"phase must be prefill|decode, got {phase!r}")
+        if int(tp) < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        default_cfg, default_rt = serving_tiny_config()
+        self.phase = phase
+        self.batch = int(batch)
+        self.prompt_len = int(prompt_len)
+        self.tp = int(tp)
+        self.cfg = cfg if cfg is not None else default_cfg
+        self.rt = rt if rt is not None else default_rt
+        self.max_len = max_len
+        self.reps = reps
+        self.opt_level = "O3"
+        self.dtype = self.cfg.compute_dtype
+        self.base_op = (f"serving.tp{self.tp}.{phase}"
+                        f".b{self.batch}p{self.prompt_len}")
+        self.op = self.base_op
+        if max_len is not None:
+            self.op += f".c{int(max_len)}"
+        if self.cfg.name != default_cfg.name:
+            self.op += f".{self.cfg.name}"
+
+    def match_names(self) -> frozenset[str]:
+        return frozenset((self.op, self.base_op, f"serving.tp{self.tp}",
+                          f"serving.{self.phase}", "serving"))
+
+    def run(self, ctx: ProbeContext) -> LatencyRecord:
+        return self.run_prepared(ctx, self.prepare(ctx))
+
+    def prepare(self, ctx: ProbeContext):
+        """Shard params over the TP mesh, lower the cell, compile (cached).
+
+        Params are ``device_put`` onto their resolved ``NamedSharding``\\ s
+        before lowering, so jit infers sharded in_shardings and GSPMD
+        partitions the module (``num_partitions=tp``, collectives in the
+        optimized HLO). The lowering runs inside
+        :func:`repro.parallel.sharding.use_sharding` so the model's
+        activation ``annotate`` constraints resolve against the same mesh.
+        """
+        import jax
+
+        from repro.launch.mesh import make_mesh_for
+        from repro.models import transformer
+        from repro.parallel import sharding as shd
+        from repro.serving.engine import Engine
+
+        if self.tp > jax.device_count():
+            raise RuntimeError(
+                f"{self.op} needs {self.tp} devices, backend has "
+                f"{jax.device_count()} (set XLA_FLAGS=--xla_force_host_"
+                f"platform_device_count={self.tp})")
+        mesh = make_mesh_for(self.tp, model_parallel=self.tp)
+        rules = shd.lm_rules(fsdp=False)
+        params = transformer.init_lm(jax.random.PRNGKey(0), self.cfg)
+        params = jax.device_put(params,
+                                shd.param_shardings(params, mesh, rules))
+        with shd.use_sharding(mesh, rules):
+            eng = Engine(params, self.cfg, self.rt)
+            if self.phase == "prefill":
+                lowered, args = eng.lower_prefill(self.batch, self.prompt_len)
+                cache_len = 0
+            else:
+                cache_len = (self.max_len if self.max_len is not None
+                             else eng.max_len)
+                lowered, args = eng.lower_decode(self.batch, self.prompt_len,
+                                                 cache_len)
+            if ctx.compile_cache is not None:
+                from repro.core.compile_cache import fidelity_key
+
+                key = fidelity_key(ctx.env, self.op, self.opt_level,
+                                   self.dtype, f"cache{cache_len}")
+                compiled, hlo, _ = ctx.compile_cache.load_or_compile(
+                    key, lowered.compile, extra=lambda c: c.as_text())
+            else:
+                compiled = lowered.compile()
+                hlo = None
+        if hlo is None:
+            try:
+                hlo = compiled.as_text()
+            except Exception:  # noqa: BLE001 - deserialized executable
+                hlo = ""
+        return (compiled, args, hlo, cache_len)
+
+    def run_prepared(self, ctx: ProbeContext, prepared) -> LatencyRecord:
+        from repro.core.perfmodel import ClassCost, HloLatencyEstimator
+
+        if prepared is None:
+            return self.run(ctx)
+        compiled, args, hlo, cache_len = prepared
+        if ctx.db is not None and getattr(ctx.db, "path", None):
+            from repro.core.latency_db import LatencyDB
+
+            if os.path.exists(ctx.db.path):
+                ctx.db.merge(LatencyDB(ctx.db.path))
+        est = HloLatencyEstimator(ctx.db, opt_level=self.opt_level,
+                                  filters=dict(ctx.env))
+        report = est.estimate(hlo)
+        m = ctx.timer.time_callable(compiled, *args, reps=self.reps)
+        coll = report.by_class.get("collective", ClassCost())
+        coll_unpriced = sum(
+            c for label, c in report.unpriced_opcodes
+            if label.startswith("collective:"))
+        notes = (f"phase={self.phase} batch={self.batch} "
+                 f"prompt={self.prompt_len} cache={cache_len} "
+                 f"tp={self.tp} model={self.cfg.name} "
+                 f"predicted_ns={report.total_ns:.3f} "
+                 f"compute_ns={report.compute_ns:.3f} "
+                 f"memory_ns={report.memory_ns:.3f} "
+                 f"collective_ns={report.collective_ns:.3f} "
+                 f"coll_ops={coll.instances:g} "
+                 f"coll_unpriced={coll_unpriced:g} "
                  f"coverage={report.coverage:.4f} "
                  f"bound={report.bound}")
         return self._record(ctx, m, notes=notes)

@@ -592,6 +592,86 @@ def audit_chase(working_set_bytes: int, steps: tuple[int, int],
     return ChainVerdict(op, "O3", "ok")
 
 
+def audit_collective(kind: str, devices: int, payload_bytes: int,
+                     lens: tuple[int, int] | None = None, *,
+                     cache: Any = None,
+                     env: Mapping[str, str] | None = None,
+                     op: str | None = None) -> ChainVerdict:
+    """Collective-ladder chain (``coll.<kind>.d<N>.<bytes>`` rows).
+
+    Two checks, mirroring the instruction-chain auditor on the SPMD module:
+
+    1. **histogram delta** — the collective opcodes of the optimized HLO at
+       the two lens must differ by exactly ``(n2-n1)`` ops of the *expected*
+       HLO kind and nothing else (an all-gather rewritten into an all-reduce,
+       or a folded-away collective, breaks the slope's denominator);
+    2. **serialized dependence** — every one of the ``n2`` collectives must
+       sit ON the carry->root dependent path: right count but off the path
+       means XLA parallelized the chain and the slope no longer measures a
+       dependent collective.
+
+    Success is ``audited`` (the SPMD artifact was opened and certified), a
+    backend with too few devices is ``unaudited:insufficient-devices`` —
+    never silently ok.
+    """
+    from repro.core.hlo_analysis import COLLECTIVE_KINDS, LADDER_TO_COLLECTIVE
+    from repro.parallel import ladders
+
+    op = op or f"coll.{kind}.d{devices}.{payload_bytes}"
+    if kind not in LADDER_TO_COLLECTIVE:
+        return ChainVerdict(op, "O3", "unaudited", cause="unknown-kind")
+    if lens is None:
+        lens = tuple(ladders.DEFAULT_LENS)
+    import jax
+
+    if devices > jax.device_count():
+        return ChainVerdict(
+            op, "O3", "unaudited", cause="insufficient-devices",
+            detail=f"row needs {devices} devices, backend has "
+                   f"{jax.device_count()}")
+    hlo_kind = LADDER_TO_COLLECTIVE[kind]
+    n1, n2 = lens
+    try:
+        texts = {n: ladders.chain_hlo_text(kind, payload_bytes, devices, n,
+                                           op=op, cache=cache, env=env)
+                 for n in (n1, n2)}
+    except Exception as e:  # noqa: BLE001 - uncompilable artifact
+        return ChainVerdict(op, "O3", "opaque", cause="rebuild-failed",
+                            detail=str(e)[:200])
+
+    def coll_hist(text: str) -> Counter:
+        c: Counter = Counter()
+        for (opcode, _e), cnt in op_histogram(text).items():
+            if opcode.endswith("-done"):
+                continue            # async pair: count the -start only
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base in COLLECTIVE_KINDS:
+                c[base] += cnt
+        return c
+
+    dn = n2 - n1
+    observed = _delta(coll_hist(texts[n2]), coll_hist(texts[n1]))
+    if observed != {hlo_kind: dn}:
+        return ChainVerdict(
+            op, "O3", "transformed", cause="rewritten-collective",
+            detail=f"lens {n1}->{n2}: expected delta [{hlo_kind}:{dn}], "
+                   f"got [{_fmt(observed)}]")
+    # dependence walk: the carry (entry param 0) must thread through every
+    # collective to the root — a collective with the right count but off the
+    # path was hoisted/parallelized and is not serialized by the slope
+    pc = path_counts(texts[n2])
+    on_path = sum(v for k, v in pc.items()
+                  if k == hlo_kind or k == f"{hlo_kind}-start")
+    if on_path != n2:
+        return ChainVerdict(
+            op, "O3", "transformed", cause="hoisted",
+            detail=f"{on_path} of {n2} {hlo_kind} ops on the carry->root "
+                   f"dependent path")
+    return ChainVerdict(op, "O3", "audited",
+                        detail=f"{dn} serialized {hlo_kind} steps/len over "
+                               f"d{devices}")
+
+
 # per-step opcode expectation of the Pallas alu_chain kernel body
 KERNEL_STEP_OPS: dict[str, dict[str, int]] = {
     "fma": {"multiply": 1, "add": 1},
@@ -652,6 +732,9 @@ _KERNEL_RE = re.compile(
 # Pallas-row grammars (see api/probes.py op construction): fused rows,
 # in-kernel memory chase rows, then the generic in-kernel chain rows whose
 # base is a registry spec name (may itself contain dots)
+_COLL_RE = re.compile(
+    r"^coll\.(psum|all_gather|reduce_scatter|ppermute)\.d(\d+)\.(\d+)"
+    r"(?:\.l(\d+)-(\d+))?$")
 _FUSED_RE = re.compile(r"^inkernel\.fused\.([a-z0-9_]+)(?:\.l(\d+)-(\d+))?$")
 _INKERNEL_MEM_RE = re.compile(
     r"^inkernel\.mem\.(\d+)(?:\.l(\d+)-(\d+))?(?:\.line(\d+))?"
@@ -717,6 +800,11 @@ def audit_target(op: str, opt_level: str, *, cache: Any = None,
                  else (8, 128))
         return dataflow.audit_alu_kernel(m.group(1), opt_level, op=op,
                                          lens=lens, tile=shape)
+    m = _COLL_RE.match(op)
+    if m:
+        lens = ((int(m.group(4)), int(m.group(5))) if m.group(4) else None)
+        return audit_collective(m.group(1), int(m.group(2)), int(m.group(3)),
+                                lens, cache=cache, env=env, op=op)
     if op.startswith(("serving.", "slo.")):
         return ChainVerdict(op, opt_level, "unaudited", cause="consumer-row",
                             detail="predicted-vs-measured consumer record; "

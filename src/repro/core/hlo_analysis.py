@@ -61,7 +61,13 @@ _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
 
-def _ring_factor(kind: str, group: int) -> float:
+def ring_factor(kind: str, group: int) -> float:
+    """Ring-algorithm wire bytes per result byte for one collective kind.
+
+    Shared convention between this parser, the measured collective ladder
+    (``repro.parallel.ladders``) and the estimator's pricing ratio — all
+    three must agree on what one "wire byte" means.
+    """
     if group <= 1:
         return 0.0
     if kind == "all-reduce":
@@ -75,6 +81,20 @@ def _ring_factor(kind: str, group: int) -> float:
     if kind == "collective-permute":
         return 1.0
     raise ValueError(kind)
+
+
+_ring_factor = ring_factor
+
+# measured-ladder row kind (``coll.<kind>.*``) <-> HLO collective opcode kind;
+# the jax primitives each ladder kind lowers to are what the names say
+# (lax.psum -> all-reduce, lax.psum_scatter -> reduce-scatter, ...)
+LADDER_TO_COLLECTIVE = {
+    "psum": "all-reduce",
+    "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter",
+    "ppermute": "collective-permute",
+}
+COLLECTIVE_TO_LADDER = {v: k for k, v in LADDER_TO_COLLECTIVE.items()}
 
 
 def _shape_info(type_str: str) -> tuple[int, int]:

@@ -510,6 +510,29 @@ class LatencyDB:
             ["cell", "phase", "batch", "prompt", "model", "predicted (ns)",
              "measured (ns)", "pred/meas", "coverage", "bound"], rows)
 
+    def _collective_markdown(self, opt_level: str) -> str:
+        """The collective ladder: one row per ``coll.<kind>.d<N>.<bytes>``
+        rung, sorted kind-major then payload. Bytes columns come from the
+        probe's notes (the *actual* local shard bytes — payload rounding to a
+        devices-multiple can exceed the nominal rung in the op name — and the
+        ring-model wire traffic one chain step moves)."""
+        rows = []
+        recs = sorted(
+            (r for r in self._records.values()
+             if r.op.startswith("coll.") and r.opt_level == opt_level),
+            key=lambda r: (r.device_kind, r.backend, r.jax_version,
+                           self._natural(r.op)))
+        for r in recs:
+            kv = parse_kv_notes(r.notes)
+            rows.append([r.op, kv.get("kind", "—"), kv.get("devices", "—"),
+                         kv.get("payload_bytes", "—"),
+                         kv.get("wire_bytes", "—"),
+                         f"{r.latency_ns:.0f}±{r.mad_ns:.0f}",
+                         kv.get("audit", "—")])
+        return markdown_table(
+            ["row", "kind", "devices", "payload (B)", "wire (B/step)",
+             "step (ns)", "audit"], rows)
+
     def compare_markdown(self, prefix: str = "inkernel.",
                          opt_level: str = "O3") -> str:
         """Host-vs-in-kernel pairing: ops measured both ways, side by side.
@@ -518,6 +541,8 @@ class LatencyDB:
         predicted (estimator over the cell's lowered HLO) vs measured
         (wall clock of the compiled executable), one row per
         ``serving.<phase>.<cell>`` record — see :meth:`_serving_markdown`.
+        ``prefix="coll."`` renders the collective-ladder rungs
+        (:meth:`_collective_markdown`).
 
         Pairs every host-level record with its ``<prefix>``-named twin at the
         same dtype, opt level **and environment** — the DB accumulates runs
@@ -533,6 +558,8 @@ class LatencyDB:
         """
         if prefix == "serving.":
             return self._serving_markdown(opt_level)
+        if prefix == "coll.":
+            return self._collective_markdown(opt_level)
         plain: dict[tuple, LatencyRecord] = {}
         inker: dict[tuple, LatencyRecord] = {}
         for r in self._records.values():

@@ -159,9 +159,12 @@ class ClassCost:
 class PricedReport:
     """Full diagnosis of one :meth:`HloLatencyEstimator.estimate` call.
 
-    ``total_ns = max(compute_ns, memory_ns)``: the serial-issue instruction
-    estimate and the measured-ladder memory estimate overlap on hardware, so
-    the slower term bounds the module (two-term roofline over measured rows).
+    ``total_ns = max(compute_ns, memory_ns) + collective_ns``: the
+    serial-issue instruction estimate and the measured-ladder memory estimate
+    overlap on hardware, so the slower term bounds the on-chip module
+    (two-term roofline over measured rows); the interconnect term — priced
+    from the measured collective ladder — is serial with both (a dependent
+    collective stalls the shard) and adds on top.
     ``coverage`` is the fraction of countable dynamic op instances priced
     from an actual DB row — instances priced at ``default_ns`` (no mapping,
     or mapping with no measured row) count against it, structural
@@ -179,16 +182,24 @@ class PricedReport:
     unpriced_opcodes: tuple[tuple[str, float], ...]   # (opcode, dyn count)
     bytes_accessed: float
     opt_level: str
+    # additive interconnect term from the measured collective ladder
+    # (``coll.<kind>.d<N>.<bytes>`` rows); 0.0 for unsharded modules, so the
+    # pre-collective report shape is unchanged
+    collective_ns: float = 0.0
 
     @property
     def bound(self) -> str:
+        if self.collective_ns > max(self.compute_ns, self.memory_ns):
+            return "collective"
         return "compute" if self.compute_ns >= self.memory_ns else "memory"
 
     def summary(self) -> str:
         miss = ", ".join(f"{op}x{c:g}" for op, c in self.unpriced_opcodes[:4])
+        coll = (f" coll={self.collective_ns:.1f}"
+                if self.collective_ns else "")
         return (f"{self.total_ns:.1f}ns ({self.bound}-bound: "
-                f"comp={self.compute_ns:.1f} mem={self.memory_ns:.1f}), "
-                f"coverage={self.coverage:.1%}"
+                f"comp={self.compute_ns:.1f} mem={self.memory_ns:.1f}"
+                f"{coll}), coverage={self.coverage:.1%}"
                 + (f", unpriced: {miss}" if miss else ""))
 
 
@@ -202,6 +213,16 @@ class MemoryRung:
     source: str                  # "inkernel" | "host"
 
 
+@dataclasses.dataclass(frozen=True)
+class CollectiveRung:
+    """One measured rung of the DB's collective ladder, keyed by HLO kind."""
+
+    kind: str                    # HLO opcode kind ("all-reduce", ...)
+    devices: int                 # ladder mesh size (== HLO group size target)
+    wire_bytes: float            # ring-convention wire bytes one step moved
+    ns: float                    # measured slope: ns per chained collective
+
+
 class _EstimatedNs(float):
     """A float that carries its :class:`PricedReport` (see ``estimate_ns``)."""
 
@@ -209,6 +230,8 @@ class _EstimatedNs(float):
 
 
 _MEM_ROW_RE = re.compile(r"^(?:mem\.chase\.ws|inkernel\.mem\.)(\d+)$")
+_COLL_ROW_RE = re.compile(
+    r"^coll\.(psum|all_gather|reduce_scatter|ppermute)\.d(\d+)\.(\d+)$")
 
 
 class HloLatencyEstimator:
@@ -235,8 +258,15 @@ class HloLatencyEstimator:
       ``mem.chase.ws<N>``): the rung covering the module's footprint gives
       ns/line, amortized over ``mem_streams`` concurrent streams (a dependent
       chase measures pure latency; streamed traffic overlaps).
+    * **collective**: each HLO-parsed
+      :class:`~repro.core.hlo_analysis.CollectiveOp` priced from the covering
+      measured ladder rung (``coll.<kind>.d<N>.<bytes>`` rows,
+      :meth:`collective_ladder`): ``wire_bytes / rung_wire x rung_ns``, per
+      kind, env-filtered. A kind with no measured rung is *never*
+      default-priced — it counts against coverage as ``collective:<kind>``.
 
-    ``total = max(compute, memory)`` — the terms overlap in hardware.
+    ``total = max(compute, memory) + collective`` — the on-chip terms overlap
+    in hardware; a dependent collective stalls the shard and adds on top.
     """
 
     THROUGHPUT_FACTOR = 0.25     # per-element cost fraction once issued
@@ -320,6 +350,44 @@ class HloLatencyEstimator:
                                    ns_per_line=r.latency_ns,
                                    line_bytes=line, source=source)
         return sorted(rungs.values(), key=lambda g: g.working_set_bytes)
+
+    def collective_ladder(self) -> dict[str, list[CollectiveRung]]:
+        """Measured collective rungs in the DB, grouped by HLO kind and
+        ascending by wire bytes.
+
+        Only unsuffixed ``coll.<kind>.d<N>.<bytes>`` rows participate (a
+        lens-suffixed row is a different fidelity experiment, exactly like
+        the memory ladder's rule). The rung's wire bytes come from the
+        probe's own notes (ring-convention, ``repro.parallel.ladders``);
+        older rows without the note fall back to re-deriving them from the
+        recorded payload, and rows with neither are unusable for pricing.
+        """
+        rungs: dict[str, list[CollectiveRung]] = {}
+        for r in self.db.query(category="collective", **self.filters):
+            m = _COLL_ROW_RE.match(r.op)
+            if not m or r.opt_level != self.opt_level:
+                continue
+            kind = hlo_analysis.LADDER_TO_COLLECTIVE[m.group(1)]
+            devices = int(m.group(2))
+            kv = parse_kv_notes(r.notes)
+            wire = float(kv.get("wire_bytes", 0.0) or 0.0)
+            if wire <= 0:
+                payload = float(kv.get("payload_bytes", m.group(3)) or 0.0)
+                if m.group(1) == "all_gather":
+                    result = payload * devices
+                elif m.group(1) == "reduce_scatter":
+                    result = payload / max(devices, 1)
+                else:
+                    result = payload
+                wire = hlo_analysis.ring_factor(kind, devices) * result
+            if wire <= 0:
+                continue
+            rungs.setdefault(kind, []).append(
+                CollectiveRung(kind=kind, devices=devices, wire_bytes=wire,
+                               ns=r.latency_ns))
+        for kind in rungs:
+            rungs[kind].sort(key=lambda g: g.wire_bytes)
+        return rungs
 
     def _memory_ns(self, bytes_accessed: float) -> float:
         """Price HBM traffic off the chase ladder: the rung whose working set
@@ -422,14 +490,49 @@ class HloLatencyEstimator:
                 unpriced += matmul_instances
                 unpriced_ops["dot"] = unpriced_ops.get("dot", 0.0) + matmul_instances
 
+        # Collectives: each parsed (trip-weighted) CollectiveOp is priced
+        # from the *covering* measured ladder rung of its kind — the first
+        # rung whose wire bytes reach the op's, else the largest — scaled
+        # linearly: ``executions x wire_bytes / rung_wire x rung_ns``. Rungs
+        # measured at the op's group size are preferred; a kind with no
+        # measured rung at all is NEVER default-priced — it counts against
+        # coverage and is reported as ``collective:<kind>`` so a sharded
+        # prediction can't look measurement-backed when its interconnect
+        # term is fiction. Zero-wire ops (group size 1) are free and count
+        # in neither direction.
+        collective_ns = 0.0
+        coll_ladder: dict[str, list[CollectiveRung]] | None = None
+        for c in mc.total().collectives:
+            if c.executions <= 0:
+                continue
+            if c.group_size <= 1 or c.wire_bytes <= 0:
+                continue
+            if coll_ladder is None:
+                coll_ladder = self.collective_ladder()
+            rungs = coll_ladder.get(c.kind, [])
+            sized = [g for g in rungs if g.devices == c.group_size] or rungs
+            rung = next((g for g in sized if g.wire_bytes >= c.wire_bytes),
+                        sized[-1] if sized else None)
+            if rung is not None:
+                ns = c.executions * (c.wire_bytes / rung.wire_bytes) * rung.ns
+                collective_ns += ns
+                priced += c.executions
+                account("collective", ns, c.executions, 0.0)
+            else:
+                unpriced += c.executions
+                label = f"collective:{c.kind}"
+                unpriced_ops[label] = unpriced_ops.get(label, 0.0) + c.executions
+                account("unpriced", 0.0, c.executions, 0.0)
+
         bytes_accessed = mc.total().bytes
         memory_ns = self._memory_ns(bytes_accessed)
         if memory_ns:
             account("memory", memory_ns, 0.0, 0.0)
         countable = priced + unpriced
         return PricedReport(
-            total_ns=max(compute, memory_ns),
+            total_ns=max(compute, memory_ns) + collective_ns,
             compute_ns=compute, memory_ns=memory_ns,
+            collective_ns=collective_ns,
             coverage=priced / countable if countable else 1.0,
             priced_instances=priced, unpriced_instances=unpriced,
             by_class=by_class,
@@ -468,6 +571,12 @@ class ServingPoint:
     memory_ns: float
     coverage: float
     model: str = ""
+    # sharded (tp>1) cells: tensor-parallel degree, interconnect term and
+    # the count of collective instances the estimator could NOT price from
+    # a measured rung (0 = fully measurement-backed interconnect)
+    tp: int = 1
+    collective_ns: float = 0.0
+    coll_unpriced: float = 0.0
 
     @property
     def ratio(self) -> float:
@@ -498,7 +607,10 @@ def servingpoint_from_record(rec: LatencyRecord) -> ServingPoint:
         compute_ns=float(kv.get("compute_ns", 0.0)),
         memory_ns=float(kv.get("memory_ns", 0.0)),
         coverage=float(kv.get("coverage", 0.0)),
-        model=kv.get("model", ""))
+        model=kv.get("model", ""),
+        tp=int(kv.get("tp", 1)),
+        collective_ns=float(kv.get("collective_ns", 0.0)),
+        coll_unpriced=float(kv.get("coll_unpriced", 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -29,6 +29,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 def make_mesh_for(devices: int, model_parallel: int = 0) -> Mesh:
     """Small meshes for tests/examples: (data, model) over available devices."""
     model = model_parallel or (2 if devices % 2 == 0 and devices > 1 else 1)
+    if model <= 0 or devices % model != 0:
+        usable = [m for m in range(1, devices + 1) if devices % m == 0]
+        shapes = [f"({devices // m}, {m})" for m in usable]
+        raise ValueError(
+            f"make_mesh_for({devices}, model_parallel={model}): {devices} "
+            f"devices are not divisible by model_parallel={model}; usable "
+            f"(data, model) shapes for {devices} devices: {', '.join(shapes)}")
     data = devices // model
     return make_mesh((data, model), ("data", "model"))
 

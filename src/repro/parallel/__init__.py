@@ -1,9 +1,18 @@
-from repro.parallel import sharding
+from repro.parallel import collectives, ladders, sharding
+from repro.parallel.collectives import (collective_matmul, quantized_psum_mean,
+                                        reference_matmul)
+from repro.parallel.ladders import (DEFAULT_PAYLOADS, LADDER_KINDS, chain_fn,
+                                    ladder_mesh, local_payload_bytes,
+                                    payload_shape, step_wire_bytes)
 from repro.parallel.sharding import (Param, ShardingRules, annotate, boxed_axes,
                                      is_param, lm_rules, param_shardings, rebox,
                                      spec_tree, unbox, use_sharding,
                                      with_layer_axis)
 
-__all__ = ["sharding", "Param", "ShardingRules", "annotate", "boxed_axes",
+__all__ = ["collectives", "ladders", "sharding",
+           "collective_matmul", "quantized_psum_mean", "reference_matmul",
+           "DEFAULT_PAYLOADS", "LADDER_KINDS", "chain_fn", "ladder_mesh",
+           "local_payload_bytes", "payload_shape", "step_wire_bytes",
+           "Param", "ShardingRules", "annotate", "boxed_axes",
            "is_param", "lm_rules", "param_shardings", "rebox", "spec_tree",
            "unbox", "use_sharding", "with_layer_axis"]

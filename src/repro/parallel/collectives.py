@@ -60,9 +60,14 @@ def quantized_psum_mean(grads: Any, mesh: Mesh, axis: str = "data",
             deq_shard = shard
             out = lax.all_gather(shard, axis, axis=0, tiled=True)
         # error feedback: what our shard lost to quantization, re-injected
-        # next step (stored only for the owned shard rows).
+        # next step. After psum_scatter(tiled=True) device j owns rows
+        # [j*rows : (j+1)*rows], so the residual must land at that offset —
+        # writing block 0 on every device double-counts block 0's error and
+        # drops everyone else's.
         err_shard = shard - deq_shard
-        new_e = jnp.zeros_like(gf).at[:shard.shape[0]].set(err_shard)
+        rows = shard.shape[0]
+        new_e = lax.dynamic_update_slice_in_dim(
+            jnp.zeros_like(gf), err_shard, lax.axis_index(axis) * rows, 0)
         return out.astype(g.dtype), new_e
 
     def mapped(gs, es):

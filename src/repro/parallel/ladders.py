@@ -1,0 +1,219 @@
+"""Collective dependent-chain ladders: the interconnect analog of the paper's
+instruction chains.
+
+The method transfers unchanged: build a chain of ``n`` *dependent* collective
+ops inside ``shard_map`` (each step consumes the previous step's carry, so the
+fabric traffic is serialized exactly like the ALU chains serialize issue), time
+two chain lengths, and take ``Timer.slope`` — dispatch, shard_map wrapping and
+the first transfer's warm-up cancel in the subtraction. One row per
+``(kind, device count, payload)`` rung: ``coll.<kind>.d<devices>.<bytes>``.
+
+Four kinds, chosen so every step is shape-invariant (a chain needs a fixed
+carry shape) while keeping the collective itself un-foldable:
+
+* ``psum`` — ``lax.psum`` (HLO all-reduce); shape-preserving, rescaled by
+  ``1/n`` so long chains stay finite.
+* ``all_gather`` — ``lax.all_gather(tiled)`` followed by a *dynamic* slice at
+  ``axis_index`` back to the local shard: the data-dependent start index keeps
+  XLA from folding the gather into a local copy.
+* ``reduce_scatter`` — ``lax.psum_scatter(tiled)`` re-tiled back up to the
+  carry shape (a cheap local broadcast-concat; the wire cost is the scatter).
+* ``ppermute`` — a ring rotation; shape-preserving by construction.
+
+Wire-byte accounting mirrors :mod:`repro.core.hlo_analysis` ring-factor
+conventions exactly (``wire = ring_factor(kind, n) x result_bytes``) so the
+estimator's ``wire_bytes / rung_wire_bytes`` scaling is self-consistent: a
+rung prices the HLO ops it is made of at ratio 1.0 by construction.
+
+Off-TPU this runs on simulated XLA host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``); the slope then
+measures the host backend's inter-device copy path, which is exactly what the
+sharded-serving probes execute on the same backend.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.hlo_analysis import LADDER_TO_COLLECTIVE, ring_factor
+
+LADDER_KINDS = tuple(LADDER_TO_COLLECTIVE)          # psum, all_gather, ...
+LADDER_AXIS = "coll"
+DEFAULT_LENS = (2, 6)
+DEFAULT_COLS = 128
+# per-device payload rungs (bytes): small / medium / large transfers
+DEFAULT_PAYLOADS = (1 << 12, 1 << 16, 1 << 20)
+
+
+def ladder_mesh(devices: int):
+    """A 1-axis mesh over the first ``devices`` local devices."""
+    import jax
+    from jax.sharding import Mesh
+
+    avail = jax.devices()
+    if devices < 1 or devices > len(avail):
+        raise RuntimeError(
+            f"collective ladder needs {devices} device(s), backend has "
+            f"{len(avail)} (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={devices} for simulated host devices)")
+    return Mesh(np.array(avail[:devices]), (LADDER_AXIS,))
+
+
+def payload_shape(payload_bytes: int, devices: int,
+                  cols: int = DEFAULT_COLS) -> tuple[int, int]:
+    """Local (per-device) f32 carry shape closest to ``payload_bytes``.
+
+    Rows are rounded up to a multiple of ``devices`` so the reduce-scatter
+    step's ``scatter_dimension=0`` tiling divides evenly; the *actual* local
+    byte count (which may exceed the nominal rung) is what the probe records
+    in its notes.
+    """
+    rows = max(1, int(round(payload_bytes / (4 * cols))))
+    rows = ((rows + devices - 1) // devices) * devices
+    return rows, cols
+
+
+def local_payload_bytes(payload_bytes: int, devices: int,
+                        cols: int = DEFAULT_COLS) -> int:
+    rows, cols = payload_shape(payload_bytes, devices, cols)
+    return rows * cols * 4
+
+
+def step_wire_bytes(kind: str, local_bytes: float, devices: int) -> float:
+    """Ring-algorithm wire bytes one chain step moves, per device.
+
+    Derived from the step's collective *result* bytes with the same factors
+    :func:`repro.core.hlo_analysis.ring_factor` applies when parsing HLO —
+    the two sides of the ``wire_bytes / rung_bytes`` pricing ratio must use
+    one convention.
+    """
+    hlo_kind = LADDER_TO_COLLECTIVE[kind]
+    if kind == "all_gather":
+        result_bytes = local_bytes * devices       # tiled gather result
+    elif kind == "reduce_scatter":
+        result_bytes = local_bytes / devices       # tiled scatter result
+    else:
+        result_bytes = local_bytes                 # psum / ppermute preserve
+    return ring_factor(hlo_kind, devices) * result_bytes
+
+
+def _step(kind: str, x, axis: str, ndev: int):
+    import jax.numpy as jnp
+    from jax import lax
+
+    if kind == "psum":
+        return lax.psum(x, axis) * (1.0 / ndev)
+    if kind == "all_gather":
+        g = lax.all_gather(x, axis, axis=0, tiled=True)
+        start = lax.axis_index(axis) * x.shape[0]
+        return lax.dynamic_slice_in_dim(g, start, x.shape[0], 0)
+    if kind == "reduce_scatter":
+        s = lax.psum_scatter(x, axis, scatter_dimension=0,
+                             tiled=True) * (1.0 / ndev)
+        return jnp.tile(s, (ndev, 1))
+    if kind == "ppermute":
+        perm = [(j, (j + 1) % ndev) for j in range(ndev)]
+        return lax.ppermute(x, axis, perm)
+    raise ValueError(f"unknown ladder kind {kind!r}; known: {LADDER_KINDS}")
+
+
+def chain_fn(kind: str, n: int, mesh):
+    """``n`` dependent collective steps inside ``shard_map``, unrolled.
+
+    Unrolled (not ``fori_loop``) so the optimized HLO carries exactly ``n``
+    collective ops of the expected kind — what makes the two-lens histogram
+    delta and the carry->root dependence walk in ``repro.audit`` exact.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    ndev = mesh.shape[LADDER_AXIS]
+
+    def body(x):
+        for _ in range(n):
+            x = _step(kind, x, LADDER_AXIS, ndev)
+        return x
+
+    return shard_map(body, mesh=mesh, in_specs=P(LADDER_AXIS),
+                     out_specs=P(LADDER_AXIS), check_rep=False)
+
+
+def make_payload(mesh, payload_bytes: int, cols: int = DEFAULT_COLS):
+    """The sharded global carry: local shard = one payload rung."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ndev = mesh.shape[LADDER_AXIS]
+    rows, cols = payload_shape(payload_bytes, ndev, cols)
+    x = jnp.ones((ndev * rows, cols), jnp.float32)
+    return jax.device_put(x, NamedSharding(mesh, P(LADDER_AXIS)))
+
+
+def chain_cache_key(env: Mapping[str, str], op: str, n: int):
+    """CompileCache identity of one chain compile (shared with the auditor)."""
+    from repro.core.compile_cache import fidelity_key
+
+    return fidelity_key(env, op, "O3", "float32", f"chain{n}")
+
+
+def compile_chain(kind: str, n: int, mesh, x, *, op: str,
+                  cache: Any = None, env: Mapping[str, str] | None = None):
+    """AOT-compile one chain length, riding the compile cache when given.
+
+    The optimized HLO text rides in the cache entry's ``extra`` payload so
+    the audit pass (``repro.audit.chain_check.audit_collective``) can verify
+    the chain without re-invoking XLA on a warm cache.
+    """
+    import jax
+
+    def do_compile():
+        return jax.jit(chain_fn(kind, n, mesh)).lower(x).compile()
+
+    if cache is not None and env is not None:
+        compiled, _, _ = cache.load_or_compile(
+            chain_cache_key(env, op, n), do_compile,
+            extra=lambda c: c.as_text())
+        return compiled
+    return do_compile()
+
+
+def prepare_collective(kind: str, payload_bytes: int, devices: int,
+                       lens: tuple[int, int], *, op: str,
+                       cache: Any = None,
+                       env: Mapping[str, str] | None = None):
+    """Build + compile the two chain lens; returns ``(fn_by_len, x, bytes)``.
+
+    ``fn_by_len`` compiles further lengths on demand — ``Timer.slope``'s
+    noisy-slope retry widens the second length past the prepared pair.
+    """
+    mesh = ladder_mesh(devices)
+    x = make_payload(mesh, payload_bytes)
+    fns: dict[int, Any] = {}
+
+    def fn_by_len(n: int):
+        if n not in fns:
+            fns[n] = compile_chain(kind, n, mesh, x, op=op,
+                                   cache=cache, env=env)
+        return fns[n]
+
+    for n in lens:
+        fn_by_len(n)
+    local_bytes = local_payload_bytes(payload_bytes, devices)
+    return fn_by_len, x, local_bytes
+
+
+def chain_hlo_text(kind: str, payload_bytes: int, devices: int, n: int, *,
+                   op: str, cache: Any = None,
+                   env: Mapping[str, str] | None = None) -> str:
+    """Optimized HLO of one chain compile; cache sidecars are peeked first."""
+    import jax
+
+    if cache is not None and env is not None:
+        text = cache.peek_extra(chain_cache_key(env, op, n))
+        if text:
+            return text
+    mesh = ladder_mesh(devices)
+    x = make_payload(mesh, payload_bytes)
+    return jax.jit(chain_fn(kind, n, mesh)).lower(x).compile().as_text()

@@ -1,0 +1,372 @@
+"""Collective ladders, explicit collectives, and the sharded-serving loop.
+
+Fast tier: ladder geometry/wire-byte conventions, the estimator's collective
+pricing term (hand-computed oracles), mesh-shape validation, Session
+cache/resume for ``coll.*`` rows, and the sharded-serving CI gate logic.
+Slow tier: multi-device numerics in subprocesses with
+``--xla_force_host_platform_device_count`` — the quantized-psum
+error-feedback regression, collective vs reference matmul across mesh sizes,
+pipeline-parallel equivalence, and ladder fan-out merge.
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from repro.core import hlo_analysis, perfmodel
+from repro.core.latency_db import LatencyDB, LatencyRecord
+from repro.launch.mesh import make_mesh_for
+from repro.parallel import ladders
+from tests._subproc import run_with_devices
+
+ENV = {"device_kind": "cpu", "backend": "cpu", "jax_version": "x"}
+
+
+def _rec(op, ns, cat="collective", dtype="float32", opt="O3", notes=""):
+    return LatencyRecord(op=op, category=cat, dtype=dtype, opt_level=opt,
+                         latency_ns=ns, mad_ns=0, cycles=ns, guard=0,
+                         net_latency_ns=ns, n_samples=5, measured_at="t",
+                         notes=notes, **ENV)
+
+
+# ------------------------------------------------------- ladder geometry
+def test_payload_shape_rounds_up_to_devices_multiple():
+    # 4096 B at 128 f32 cols -> 8 rows; already a multiple of 4
+    assert ladders.payload_shape(4096, 4) == (8, 128)
+    # 3 rows nominal, 4 devices -> rounded up to 4
+    assert ladders.payload_shape(1536, 4) == (4, 128)
+    assert ladders.local_payload_bytes(1536, 4) == 4 * 128 * 4
+    # never zero rows
+    assert ladders.payload_shape(1, 2) == (2, 128)
+
+
+def test_step_wire_bytes_matches_ring_factor_conventions():
+    local = 4096.0
+    # psum -> all-reduce: 2(g-1)/g of the (shape-preserving) result
+    assert ladders.step_wire_bytes("psum", local, 4) == \
+        pytest.approx(1.5 * local)
+    # all_gather result is local*devices, ring factor (g-1)/g
+    assert ladders.step_wire_bytes("all_gather", local, 4) == \
+        pytest.approx(0.75 * local * 4)
+    # reduce_scatter result is local/devices, ring factor g-1
+    assert ladders.step_wire_bytes("reduce_scatter", local, 4) == \
+        pytest.approx(3 * local / 4)
+    # ppermute is a point-to-point hop: exactly the payload
+    assert ladders.step_wire_bytes("ppermute", local, 4) == \
+        pytest.approx(local)
+    # single device: nothing crosses the fabric
+    for kind in ladders.LADDER_KINDS:
+        assert ladders.step_wire_bytes(kind, local, 1) == 0.0
+
+
+def test_ladder_kind_mapping_roundtrips():
+    for kind, hlo_kind in hlo_analysis.LADDER_TO_COLLECTIVE.items():
+        assert hlo_analysis.COLLECTIVE_TO_LADDER[hlo_kind] == kind
+        assert hlo_kind in hlo_analysis.COLLECTIVE_KINDS
+    assert set(ladders.LADDER_KINDS) == \
+        set(hlo_analysis.LADDER_TO_COLLECTIVE)
+
+
+# ------------------------------------------------------- mesh validation
+def test_make_mesh_for_rejects_indivisible_shapes():
+    with pytest.raises(ValueError) as exc:
+        make_mesh_for(6, model_parallel=4)
+    # the error must hand the caller shapes that would work
+    assert "(3, 2)" in str(exc.value) and "(1, 6)" in str(exc.value)
+    with pytest.raises(ValueError):
+        make_mesh_for(4, model_parallel=3)
+    with pytest.raises(ValueError):
+        make_mesh_for(4, model_parallel=-2)
+
+
+def test_make_mesh_for_valid_shapes_still_build():
+    m = make_mesh_for(1)
+    assert dict(zip(m.axis_names, m.devices.shape)) == {"data": 1, "model": 1}
+
+
+# --------------------------------------------------------- probe naming
+def test_collective_probe_row_naming_and_validation():
+    from repro.api.probes import CollectiveProbe
+
+    p = CollectiveProbe("psum", 4096, devices=4)
+    assert p.op == "coll.psum.d4.4096"
+    assert p.opt_level == "O3" and p.category == "collective"
+    assert {"coll", "coll.psum", "coll.psum.d4.4096"} <= p.match_names()
+    # non-default lens become a fidelity suffix (a different experiment)
+    assert CollectiveProbe("psum", 4096, devices=4,
+                           lens=(3, 9)).op == "coll.psum.d4.4096.l3-9"
+    with pytest.raises(ValueError):
+        CollectiveProbe("allreduce", 4096, devices=4)   # unknown kind
+    with pytest.raises(ValueError):
+        CollectiveProbe("psum", 0, devices=4)
+
+
+def test_sharded_serving_probe_row_naming():
+    from repro.api.probes import ShardedServingCostProbe
+
+    p = ShardedServingCostProbe("prefill", 1, 16, tp=2)
+    assert p.op == "serving.tp2.prefill.b1p16"
+    assert {"serving", "serving.tp2", "serving.prefill"} <= p.match_names()
+    with pytest.raises(ValueError):
+        ShardedServingCostProbe("train", 1, 16, tp=2)
+    with pytest.raises(ValueError):
+        ShardedServingCostProbe("prefill", 1, 16, tp=0)
+
+
+# ------------------------------------------- estimator collective oracle
+AR_HLO = """HloModule m, num_partitions=8
+
+ENTRY %main (p0: f32[64,64]) -> f32[64,64] {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  ROOT %ar = f32[64,64]{1,0} all-reduce(%p0), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+}
+"""
+# parse_collectives: group 4, wire = 2*(3/4) * 64*64*4 = 24576 B
+
+
+def test_collective_ladder_reads_rows_and_sorts():
+    db = LatencyDB()
+    db.add(_rec("coll.psum.d4.65536", 100.0,
+                notes="kind=psum devices=4 payload_bytes=65536 "
+                      "wire_bytes=98304"))
+    db.add(_rec("coll.psum.d4.4096", 10.0,
+                notes="kind=psum devices=4 payload_bytes=4096 "
+                      "wire_bytes=6144"))
+    # fidelity-suffixed rows are a different experiment: never in the ladder
+    db.add(_rec("coll.psum.d4.4096.l3-9", 999.0))
+    ladder = perfmodel.HloLatencyEstimator(db).collective_ladder()
+    rungs = ladder["all-reduce"]
+    assert [(g.devices, g.wire_bytes, g.ns) for g in rungs] == \
+        [(4, 6144.0, 10.0), (4, 98304.0, 100.0)]
+
+
+def test_estimator_prices_collective_from_covering_rung():
+    """24576 wire B priced from the 98304-B rung: 24576/98304 * 100 = 25."""
+    db = LatencyDB()
+    db.add(_rec("coll.psum.d4.4096", 10.0,
+                notes="kind=psum devices=4 wire_bytes=8192"))
+    db.add(_rec("coll.psum.d4.65536", 100.0,
+                notes="kind=psum devices=4 wire_bytes=98304"))
+    r = perfmodel.HloLatencyEstimator(db).estimate(AR_HLO)
+    assert r.collective_ns == pytest.approx(25.0)
+    assert r.by_class["collective"].ns == pytest.approx(25.0)
+    assert r.by_class["collective"].instances == 1.0
+    # serial interconnect term: total = max(compute, memory) + collective
+    assert r.total_ns == pytest.approx(
+        max(r.compute_ns, r.memory_ns) + 25.0)
+    assert not [u for u in r.unpriced_opcodes
+                if u[0].startswith("collective:")]
+
+
+def test_estimator_extrapolates_beyond_deepest_rung():
+    db = LatencyDB()
+    db.add(_rec("coll.psum.d4.4096", 10.0,
+                notes="kind=psum devices=4 wire_bytes=6144"))
+    r = perfmodel.HloLatencyEstimator(db).estimate(AR_HLO)
+    # 24576 B exceeds the only rung (6144 B): linear extrapolation
+    assert r.collective_ns == pytest.approx(24576 / 6144 * 10.0)
+
+
+def test_unpriced_collective_is_never_default_priced():
+    """No psum rungs in the DB: the all-reduce must contribute ZERO ns and
+    be reported as unpriced — a silently default-priced collective would
+    make every sharded prediction look covered when it is not."""
+    db = LatencyDB()
+    db.add(_rec("coll.ppermute.d4.4096", 10.0,
+                notes="kind=ppermute devices=4 wire_bytes=4096"))
+    r = perfmodel.HloLatencyEstimator(db, default_ns=5.0).estimate(AR_HLO)
+    assert r.collective_ns == 0.0
+    assert ("collective:all-reduce", 1.0) in list(r.unpriced_opcodes)
+    assert r.by_class["unpriced"].instances >= 1.0
+    assert "collective" not in r.by_class
+
+
+def test_collective_markdown_renders_rungs(tmp_path):
+    db = LatencyDB()
+    db.add(_rec("coll.psum.d4.4096", 10.0,
+                notes="kind=psum devices=4 payload_bytes=4096 "
+                      "wire_bytes=6144 audit=audited"))
+    md = db.compare_markdown(prefix="coll.")
+    assert "coll.psum.d4.4096" in md
+    assert "6144" in md and "audited" in md
+
+
+def test_sharded_servingpoint_round_trip():
+    rec = _rec("serving.tp2.prefill.b1p16", 5e5, cat="serving",
+               notes="phase=prefill batch=1 prompt=16 tp=2 "
+                     "model=serving-tiny predicted_ns=2.5e5 "
+                     "compute_ns=1e5 memory_ns=2e5 collective_ns=5e4 "
+                     "coll_ops=5 coll_unpriced=0 coverage=0.7 bound=memory")
+    pt = perfmodel.servingpoint_from_record(rec)
+    assert pt.tp == 2 and pt.phase == "prefill"
+    assert pt.collective_ns == pytest.approx(5e4)
+    assert pt.coll_unpriced == 0.0
+    assert pt.predicted_ns == pytest.approx(2.5e5)
+
+
+def test_check_sharded_serving_gate_flags_unpriced_collectives():
+    import dataclasses
+
+    from benchmarks.check_sharded_serving import check_points
+
+    tol = {"max_abs_log10_ratio": 4.0, "min_coverage": 0.5,
+           "max_coll_unpriced": 0}
+    good = perfmodel.ServingPoint(
+        phase="prefill", batch=1, prompt_len=16, model="serving-tiny",
+        predicted_ns=2e5, measured_ns=4e5, compute_ns=1e5, memory_ns=1e5,
+        coverage=0.7, tp=2, collective_ns=5e4, coll_unpriced=0.0)
+    assert check_points([good], tol) == []
+    bad = dataclasses.replace(good, coll_unpriced=3.0)
+    msgs = check_points([bad], tol)
+    assert len(msgs) == 1 and "3 collective op(s)" in msgs[0]
+    uncovered = dataclasses.replace(good, coverage=0.1)
+    assert any("coverage" in m for m in check_points([uncovered], tol))
+
+
+# ------------------------------------------- Session cache/resume (d1)
+def test_ladder_rows_cache_and_resume_through_session(tmp_path):
+    from repro.api import Plan, Session
+    from repro.core.timing import Timer
+
+    db_path = str(tmp_path / "db.json")
+    plan = Plan.collectives(kinds=("psum",), payloads=(4096,), devices=1)
+    session = Session(db=db_path, timer=Timer(warmup=1, reps=2))
+    first = session.run(plan)
+    assert len(first.measured) == 1 and not first.failed
+    rec = first.measured[0].record
+    assert rec.op == "coll.psum.d1.4096" and rec.category == "collective"
+    # resume: a fresh Session over the same DB file skips the row
+    second = Session(db=db_path, timer=Timer(warmup=1, reps=2)).run(plan)
+    assert len(second.cached) == 1 and not second.measured
+
+
+def test_collectives_plan_dedupes_and_names_rows():
+    from repro.api import Plan
+
+    plan = Plan.collectives(kinds=("psum", "ppermute"),
+                            payloads=(4096, 65536), devices=4)
+    ops = [p.op for p in plan]
+    assert len(ops) == len(set(ops)) == 4
+    assert (Plan.collectives(kinds=("psum",), payloads=(4096,), devices=4)
+            + Plan.collectives(kinds=("psum",), payloads=(4096,),
+                               devices=4)).probes.__len__() == 1
+
+
+# ----------------------------------------------------- multi-device tier
+@pytest.mark.slow
+def test_quantized_psum_error_feedback_lands_in_owned_rows():
+    """The headline regression: after ``psum_scatter(tiled=True)`` device j
+    owns rows [j*rows:(j+1)*rows], so its residual must be re-injected
+    there. Feeding zero gradients on step 2 makes the output *exactly* the
+    mean of the re-injected error maps — under the old block-0 write, blocks
+    1..n-1 come back identically zero and this fails."""
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh_for
+from repro.parallel import collectives
+
+mesh = make_mesh_for(4, model_parallel=1)
+n, rows = 4, 8 // 4
+g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 256))}
+
+out1, err1 = collectives.quantized_psum_mean(g, mesh, axis="data")
+resid = np.asarray(g["w"] - out1["w"])       # true per-block residual map
+zero = {"w": jnp.zeros_like(g["w"])}
+out2, _ = collectives.quantized_psum_mean(zero, mesh, axis="data", error=err1)
+got = np.asarray(out2["w"])
+want = resid / n                             # psum-mean of one-owner blocks
+scale = float(np.abs(want).max())
+assert scale > 0
+err_rest = float(np.abs(got[rows:] - want[rows:]).max())
+assert err_rest < 0.2 * scale, (err_rest, scale)
+
+# multi-step convergence: with feedback the time-averaged compressed mean
+# beats the one-step quantization error; the old code pinned blocks >= 1 at
+# exactly the one-step error forever (no correction ever reaches them)
+onestep = float(np.abs(resid).max())
+err = None
+acc = jnp.zeros_like(g["w"])
+T = 30
+for _ in range(T):
+    red, err = collectives.quantized_psum_mean(g, mesh, axis="data",
+                                               error=err)
+    acc = acc + red["w"]
+avg_err = float(jnp.max(jnp.abs(acc / T - g["w"])))
+assert avg_err < 0.9 * onestep, (avg_err, onestep)
+print("FEEDBACK-OK", err_rest / scale, avg_err / onestep)
+""", n_devices=4)
+    assert "FEEDBACK-OK" in out
+
+
+@pytest.mark.slow
+def test_collective_matmul_matches_reference_across_mesh_sizes():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh_for
+from repro.parallel import collectives
+
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+w = jax.random.normal(jax.random.PRNGKey(2), (64, 32))
+want = np.asarray(collectives.reference_matmul(x, w))
+for model in (1, 2, 4):                       # n=1 is the degenerate ring
+    mesh = make_mesh_for(8, model_parallel=model)
+    y = collectives.collective_matmul(x, w, mesh, axis="model")
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-4, rtol=1e-4)
+print("MATMUL-OK")
+""", n_devices=8)
+    assert "MATMUL-OK" in out
+
+
+@pytest.mark.slow
+def test_pipeline_forward_matches_reference_with_bubble_oracle():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.parallel import pipeline
+
+s, m, d = 4, 6, 16
+mesh = make_mesh((s,), ("pod",))
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+params = {"w": jax.random.normal(jax.random.PRNGKey(0), (s, d, d)) * 0.5,
+          "b": jax.random.normal(jax.random.PRNGKey(1), (s, d)) * 0.1}
+x = jax.random.normal(jax.random.PRNGKey(2), (m, 2, d))
+got = pipeline.pipeline_forward(stage_fn, params, x, mesh, axis="pod")
+want = pipeline.reference_forward(stage_fn, params, x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           atol=1e-5, rtol=1e-5)
+# GPipe fill-drain oracle: (S-1)/(M+S-1), and no bubble with one stage
+assert abs(pipeline.bubble_fraction(s, m) - (s - 1) / (m + s - 1)) < 1e-12
+assert pipeline.bubble_fraction(1, m) == 0.0
+print("PIPELINE-OK")
+""", n_devices=4)
+    assert "PIPELINE-OK" in out
+
+
+@pytest.mark.slow
+def test_ladder_fan_out_merges_shard_dbs(tmp_path):
+    db_path = str(tmp_path / "fan.json")
+    out = run_with_devices(f"""
+import jax
+from repro.api import Plan, Session
+from repro.core.timing import Timer
+
+plan = Plan.collectives(kinds=("psum", "ppermute"), payloads=(4096,),
+                        devices=2)
+session = Session(db={db_path!r}, timer=Timer(warmup=1, reps=2))
+result = session.fan_out(plan, devices=jax.local_devices()[:2])
+assert len(result.measured) == 2 and not result.failed, result.summary()
+ops = sorted(r.op for r in session.db.records())
+assert ops == ["coll.ppermute.d2.4096", "coll.psum.d2.4096"], ops
+
+# resume through the merged DB: every row is now a cache hit
+again = Session(db={db_path!r},
+                timer=Timer(warmup=1, reps=2)).fan_out(
+    plan, devices=jax.local_devices()[:2])
+assert len(again.cached) == 2 and not again.measured, again.summary()
+print("FANOUT-OK")
+""", n_devices=2)
+    assert "FANOUT-OK" in out
